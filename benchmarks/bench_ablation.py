@@ -1,0 +1,63 @@
+"""Ablations over the paper's key design choices.
+
+The paper fixes N_A = 16 rows/cycle and a 3-bit ADC (clamp at 8) from
+sense-margin + sparsity analysis (Sections III.2, IV.4). This benchmark
+sweeps both knobs on a trained ternary classifier and on random ternary
+GEMMs, reporting (i) task accuracy and (ii) MAC distortion vs the exact
+product — quantifying how much architectural headroom the chosen point
+leaves (the paper's choice should sit on the flat part of the curve).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import site_cim as sc
+from repro.core.ternary import ternarize
+from benchmarks.bench_accuracy import _train_ternary_mlp
+
+
+def mac_distortion(block: int, adc_max: int, key, p_zero=0.55, n=64, k=1024, m=64):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = (jax.random.choice(k1, jnp.array([-1, 1]), (n, k))
+         * jax.random.bernoulli(k3, 1 - p_zero, (n, k))).astype(jnp.int32)
+    w = (jax.random.choice(k2, jnp.array([-1, 1]), (k, m))
+         * jax.random.bernoulli(k4, 1 - p_zero, (k, m))).astype(jnp.int32)
+    cfg = sc.SiTeCiMConfig(block=block, adc_max=adc_max)
+    out = sc.site_cim_matmul(x, w, cfg).astype(jnp.float32)
+    exact = (x @ w).astype(jnp.float32)
+    rel = jnp.linalg.norm(out - exact) / jnp.maximum(jnp.linalg.norm(exact), 1e-9)
+    return float(rel)
+
+
+def run(csv: bool = True):
+    (w1, w2), (xs, ys) = _train_ternary_mlp(jax.random.PRNGKey(0))
+
+    def acc(block: int, adc_max: int) -> float:
+        xt, sx = ternarize(xs)
+        w1t, s1 = ternarize(w1, axis=(0,))
+        cfg = sc.SiTeCiMConfig(block=block, adc_max=adc_max)
+        h = sc.site_cim_matmul(xt.astype(jnp.int32), w1t.astype(jnp.int32), cfg)
+        h = jax.nn.relu(h.astype(jnp.float32) * sx * s1)
+        return float((jnp.argmax(h @ w2, -1) == ys).mean())
+
+    rows = []
+    key = jax.random.PRNGKey(42)
+    # ADC sweep at the paper's N_A = 16
+    for adc in (2, 4, 8, 12, 16):
+        rows.append((f"adc_max={adc}_block=16", acc(16, adc),
+                     f"gemm_rel_err={mac_distortion(16, adc, key):.4f}"))
+    # block-size sweep at the matching ADC bound (adc = block/2: the
+    # paper's 3-bit-for-16-rows proportionality)
+    for block in (8, 16, 32, 64):
+        rows.append((f"block={block}_adc={block//2}", acc(block, block // 2),
+                     f"gemm_rel_err={mac_distortion(block, block // 2, key):.4f}"))
+    if csv:
+        print("name,accuracy,derived")
+        for name, a, d in rows:
+            print(f"{name},{a:.4f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

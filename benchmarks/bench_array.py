@@ -1,0 +1,34 @@
+"""Paper Figs 9 & 11: array-level CiM/read/write latency+energy vs NM,
+per technology and flavor — derived from the calibrated cost model and
+checked against the paper's reported percentages."""
+from __future__ import annotations
+
+from repro.core import cost_model as cm
+
+
+def rows():
+    out = []
+    for tech in cm.TECHNOLOGIES:
+        for design in ("CiM-I", "CiM-II"):
+            t = cm.paper_validation_table()[tech][design]
+            out.append({
+                "figure": "Fig9" if design == "CiM-I" else "Fig11",
+                "tech": tech,
+                "design": design,
+                **{k: round(v, 2) for k, v in t.items()},
+            })
+    return out
+
+
+def run(csv: bool = True):
+    rs = rows()
+    if csv:
+        keys = list(rs[0].keys())
+        print(",".join(keys))
+        for r in rs:
+            print(",".join(str(r[k]) for k in keys))
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: wall time of the CiM formulations on this
+host (CPU) + the TPU-target roofline characteristics of each kernel.
+
+Wall-clock here characterizes the *functional* implementations (the jnp
+forms XLA:CPU executes); the Pallas kernels are timed in interpret mode
+only for sanity (they target TPU). The derived column reports the
+analytic bytes/flops profile used by EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import site_cim as sc
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def rand_ternary(key, shape, p_zero=0.3):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(jnp.float32)
+
+
+def run(csv: bool = True):
+    m, k, n = 256, 1024, 512
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = rand_ternary(kx, (m, k))
+    w = rand_ternary(kw, (k, n))
+    flops_exact = 2 * m * k * n
+    rows = []
+
+    cim = jax.jit(lambda x, w: sc.site_cim_matmul(x, w))
+    rows.append(("cim_blocked_jnp", _time(cim, x, w), f"flops={2*flops_exact}"))
+    corr = jax.jit(lambda x, w: sc.site_cim_matmul_corrected(x, w))
+    rows.append(("cim_corrected_jnp", _time(corr, x, w), f"flops={3*flops_exact}"))
+    nm = jax.jit(lambda x, w: sc.nm_ternary_matmul(x, w))
+    rows.append(("nm_exact_jnp", _time(nm, x, w), f"flops={flops_exact}"))
+    bit = jax.jit(lambda x, w: sc.site_cim_matmul_bitplane(
+        x.astype(jnp.int32), w.astype(jnp.int32)))
+    rows.append(("cim_bitplane_jnp", _time(bit, x, w, reps=2), "structural oracle"))
+
+    if csv:
+        print("name,us_per_call,derived")
+        for name, us, d in rows:
+            print(f"{name},{us:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

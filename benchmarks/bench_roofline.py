@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run JSON artifacts (results/dryrun/*.json).
+
+Prints the per-(arch x shape x mesh) three-term roofline and the summary
+EXPERIMENTS.md §Roofline embeds. Falls back to a notice when the dry-run
+has not been executed yet (it needs the 512-device env)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_rows(results_dir: str = RESULTS):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("roofline"):
+            rows.append(d["roofline"])
+        elif d.get("error", "").startswith("SKIP"):
+            rows.append({
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh_name"],
+                "skip": d["error"],
+            })
+    return rows
+
+
+def run(csv: bool = True, results_dir: str = RESULTS):
+    rows = load_rows(results_dir)
+    if not rows:
+        print("no dry-run artifacts found — run:")
+        print("  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out results/dryrun")
+        return []
+    if csv:
+        print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+              "bottleneck,roofline_fraction,useful_flops_ratio")
+        for r in rows:
+            if "skip" in r:
+                print(f"{r['arch']},{r['shape']},{r['mesh']},,,,SKIP,,")
+                continue
+            print(
+                f"{r['arch']},{r['shape']},{r['mesh']},"
+                f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+                f"{r['t_collective_s']:.3e},{r['bottleneck']},"
+                f"{r['roofline_fraction']:.4f},{r['useful_flops_ratio']:.4f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

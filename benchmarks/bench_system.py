@@ -1,0 +1,52 @@
+"""Paper Figs 12 & 13: system-level speedup and energy reduction of SiTe
+CiM I/II vs iso-capacity / iso-area NM baselines, per technology, over the
+5-benchmark suite (AlexNet, ResNet34, Inception, LSTM, GRU)."""
+from __future__ import annotations
+
+from repro.core import accelerator as acc
+from repro.core import cost_model as cm
+
+
+def rows():
+    out = []
+    for design in ("CiM-I", "CiM-II"):
+        for tech in cm.TECHNOLOGIES:
+            for baseline in ("iso-capacity", "iso-area"):
+                per = acc.speedup_and_energy(tech, design, baseline)
+                for bench, v in per.items():
+                    out.append({
+                        "figure": "Fig12" if design == "CiM-I" else "Fig13",
+                        "design": design,
+                        "tech": tech,
+                        "baseline": baseline,
+                        "benchmark": bench,
+                        "speedup": round(v["speedup"], 2),
+                        "energy_reduction": round(v["energy_reduction"], 2),
+                    })
+                paper_s = acc.PAPER_SYSTEM_SPEEDUP[(design, baseline)][tech]
+                out.append({
+                    "figure": "Fig12" if design == "CiM-I" else "Fig13",
+                    "design": design, "tech": tech, "baseline": baseline,
+                    "benchmark": "AVERAGE",
+                    "speedup": round(acc.average_speedup(tech, design, baseline), 2),
+                    "energy_reduction": round(
+                        acc.average_energy_reduction(tech, design, baseline), 2),
+                    "paper_speedup": paper_s,
+                    "paper_energy": acc.PAPER_SYSTEM_ENERGY[design][tech],
+                })
+    return out
+
+
+def run(csv: bool = True):
+    rs = rows()
+    if csv:
+        keys = ["figure", "design", "tech", "baseline", "benchmark",
+                "speedup", "energy_reduction", "paper_speedup", "paper_energy"]
+        print(",".join(keys))
+        for r in rs:
+            print(",".join(str(r.get(k, "")) for k in keys))
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_array    — Figs 9/11  (array-level CiM/read/write vs NM)
+  bench_system   — Figs 12/13 (system-level speedup/energy, 5 DNNs)
+  bench_accuracy — Section III.2 resilience (ADC clamp + sensing errors)
+  bench_ablation — N_A / ADC-precision design-point sweep (Sections III.2, IV.4)
+  bench_kernels  — kernel micro-bench (CPU wall time + cost profile)
+  bench_roofline — §Roofline table from the dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_ablation,
+        bench_accuracy,
+        bench_array,
+        bench_kernels,
+        bench_roofline,
+        bench_system,
+    )
+
+    suites = {
+        "array": bench_array,
+        "system": bench_system,
+        "accuracy": bench_accuracy,
+        "ablation": bench_ablation,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    names = [args.only] if args.only else list(suites)
+    for name in names:
+        print(f"\n===== bench:{name} =====")
+        suites[name].run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serving example: continuous batching over a ternary-CiM LM.
+
+Spins up the slot-pool batcher, submits a stream of requests with
+different lengths, and decodes them concurrently — finished slots refill
+from the queue without stalling the others.
+
+Run: PYTHONPATH=src python examples/serve_ternary.py
+"""
+import time
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serve.engine import ContinuousBatcher, Request
+
+def main():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batcher = ContinuousBatcher(params, cfg, n_slots=4, s_max=64)
+
+    reqs = [Request(i, [1 + i % 7, 2, 3 + i % 5][: 1 + i % 3], max_new=4 + i % 6)
+            for i in range(10)]
+    for r in reqs:
+        batcher.submit(r)
+
+    t0 = time.perf_counter()
+    steps = 0
+    while batcher.queue or any(s is not None for s in batcher.slot_req):
+        batcher.step()
+        steps += 1
+    dt = time.perf_counter() - t0
+    total_toks = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_toks} tokens "
+          f"in {steps} fused decode steps ({dt:.2f}s)")
+    for r in reqs:
+        assert r.done
+        print(f"  req {r.rid}: prompt {r.prompt} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

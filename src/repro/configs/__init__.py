@@ -1,0 +1,3 @@
+"""Per-architecture configs. Each module exports CONFIG (full size, used
+by the dry-run only) and SMOKE_CONFIG (reduced same-family config that
+runs a real step on CPU)."""

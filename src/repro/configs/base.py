@@ -1,0 +1,153 @@
+"""Architecture configuration schema.
+
+One dataclass covers every assigned architecture family (dense / ssm /
+hybrid / moe / encdec-audio / vlm). Each assigned arch gets a module in
+this package exporting ``CONFIG`` (full-size, dry-run only) and
+``SMOKE_CONFIG`` (reduced, runs a real step on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.layers import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | ssm | hybrid | moe | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None        # defaults to d_model // n_heads
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0                  # per-expert FFN width (moe)
+    moe_capacity_factor: float = 1.25
+
+    # --- MLA (deepseek-v2) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+
+    # --- hybrid (zamba2): shared attention block every k mamba layers ---
+    hybrid_attn_every: int = 6
+
+    # --- encdec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500               # precomputed frame embeddings
+
+    # --- vlm (llava-next) ---
+    n_image_tokens: int = 0
+    d_vision: int = 1024                  # patch-embedding width (stub)
+
+    # --- paper technique ---
+    quant: QuantConfig = QuantConfig(mode="off")
+    quantize_unembed: bool = False
+
+    # --- attention execution ---
+    # 0 = full (materialized scores); >0 = flash-style chunked attention
+    # over KV blocks of this size for training/prefill (§Perf hillclimb)
+    attn_chunk: int = 0
+
+    # --- training/runtime ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    # long-context support marker: archs with sub-quadratic decode
+    subquadratic: bool = False
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND model-FLOPs)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "encdec", "vlm", "hybrid"):
+            if self.mla:
+                attn = (
+                    d * (self.q_lora_rank or d)  # wq (or via q lora)
+                    + d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                    + self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d
+                )
+                if self.q_lora_rank:
+                    attn += self.q_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                else:
+                    attn = (
+                        d * self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                        + d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                        + self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                        + self.n_heads * self.v_head_dim * d
+                    )
+            else:
+                attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            if self.n_experts:
+                ffn = 3 * d * self.expert_d_ff * (self.n_experts + self.n_shared_experts) + d * self.n_experts
+            else:
+                ffn = 3 * d * f
+            per_layer = attn + ffn
+        if self.family == "ssm":
+            di, ns = self.ssm_d_inner, self.ssm_state
+            per_layer = d * (2 * di + 2 * self.ssm_n_groups * ns + self.ssm_n_heads) + di * d
+        if self.family == "hybrid":
+            # mamba layers + shared attention block (counted once: shared)
+            di, ns = self.ssm_d_inner, self.ssm_state
+            mamba = d * (2 * di + 2 * self.ssm_n_groups * ns + self.ssm_n_heads) + di * d
+            per_layer = mamba  # attention block shared; add below
+        total = emb + L * per_layer
+        if self.family == "hybrid":
+            total += self.d_model * self.resolved_head_dim * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.resolved_head_dim * self.d_model + 3 * d * f
+        if self.family == "encdec":
+            total += self.n_encoder_layers * (4 * d * d + 3 * d * f)  # encoder
+            total += L * (4 * d * d)  # cross attention
+        if self.family == "vlm":
+            total += self.d_vision * d  # projector
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed top-k + shared)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = 3 * d * self.expert_d_ff * self.n_experts * self.n_layers
+        active = 3 * d * self.expert_d_ff * self.top_k * self.n_layers
+        return int(full - all_experts + active)

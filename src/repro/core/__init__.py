@@ -1,0 +1,31 @@
+"""Core contribution of the paper: signed-ternary CiM in JAX.
+
+Public surface:
+  * ternary quantization / encodings (``repro.core.ternary``)
+  * SiTe CiM array functional model (``repro.core.site_cim``)
+  * array-level cost model, Figs 9/11 (``repro.core.cost_model``)
+  * TiM-DNN system model, Figs 12/13 (``repro.core.accelerator``)
+"""
+from repro.core.site_cim import (  # noqa: F401
+    ADC_MAX,
+    N_ACTIVE,
+    PAPER_CIM_I,
+    PAPER_CIM_II,
+    SENSE_ERROR_PROB,
+    SiTeCiMConfig,
+    nm_ternary_matmul,
+    scalar_product,
+    site_cim_matmul,
+    site_cim_matmul_bitplane,
+    site_cim_matmul_corrected,
+)
+from repro.core.ternary import (  # noqa: F401
+    from_bitplanes,
+    pack_ternary,
+    ste_ternarize,
+    ste_unit_ternarize,
+    ternarize,
+    ternary_sparsity,
+    to_bitplanes,
+    unpack_ternary,
+)

@@ -1,0 +1,244 @@
+"""SiTe CiM functional model — the paper's core contribution, in JAX.
+
+Implements the *architectural semantics* of the signed-ternary
+compute-in-memory array (Sections III and IV of the paper):
+
+  * differential ternary encoding of weights (M1/M2 bit-cells) and inputs
+    (RWL1/RWL2 wordlines),
+  * scalar product truth table (Fig. 3(d) / Fig. 5(e)),
+  * multi-row MAC: N_A = 16 rows asserted per cycle; RBL1 accumulates the
+    count ``a`` of (+1) products and RBL2 the count ``b`` of (-1) products,
+  * 3-bit flash ADC + extra sense-amp: each of a, b is digitized to 0..8,
+    with the paper's approximation that all values 9..16 read as 8,
+  * block partial sum = clip8(a) - clip8(b); partial sums accumulated
+    digitally in the PCU across the K/16 blocks of a column,
+  * optional stochastic sensing-error channel (total error probability
+    3.1e-3 per the paper's SM + sparsity analysis [21]), modelled as a
+    +/-1 perturbation of a block partial (adjacent-ADC-level error),
+  * flavor I vs II: functionally identical MAC results (the flavors differ
+    in circuits/cost, captured in core/cost_model.py); flavor II is
+    restricted to one row per block per cycle, which only affects the
+    cost/latency model, not the math.
+
+TPU adaptation (see DESIGN.md §2): instead of emulating bitline event
+counting, we use the exact identity
+
+    p_blk = sum_i x_i w_i          (signed dot, 16-deep)
+    m_blk = sum_i |x_i| |w_i|      (magnitude dot, 16-deep)
+    a = (m_blk + p_blk) / 2,   b = (m_blk - p_blk) / 2
+
+so the array semantics become two (blocked) matmuls + elementwise clamp —
+an MXU-native formulation. ``site_cim_matmul`` below is the reference
+implementation; ``repro.kernels`` holds the Pallas kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Paper constants (Sections III.2, IV.3)
+N_ROWS = 256            # rows per array
+N_COLS = 256            # columns per array
+N_ACTIVE = 16           # rows asserted per cycle (N_A)
+ADC_BITS = 3
+ADC_MAX = 8             # 3-bit ADC + extra sense amp for the value 8
+SENSE_ERROR_PROB = 3.1e-3  # total probability of a sensing error [21]
+
+
+@dataclasses.dataclass(frozen=True)
+class SiTeCiMConfig:
+    """Architectural knobs of a SiTe CiM array (paper defaults)."""
+    flavor: str = "I"            # "I" (per-cell coupling) or "II" (sub-column)
+    block: int = N_ACTIVE        # rows asserted per cycle
+    adc_max: int = ADC_MAX       # clamp bound for a and b
+    error_prob: float = 0.0      # sensing-error probability (0 = ideal)
+    n_rows: int = N_ROWS
+    n_cols: int = N_COLS
+
+    def __post_init__(self):
+        if self.flavor not in ("I", "II"):
+            raise ValueError(f"unknown SiTe CiM flavor {self.flavor!r}")
+        if self.n_rows % self.block != 0:
+            raise ValueError("n_rows must be divisible by the block size")
+
+
+PAPER_CIM_I = SiTeCiMConfig(flavor="I")
+PAPER_CIM_II = SiTeCiMConfig(flavor="II")
+
+
+# ---------------------------------------------------------------------------
+# Scalar product (single cell) — Fig. 3(c-f) truth table
+# ---------------------------------------------------------------------------
+
+def scalar_product(i: jax.Array, w: jax.Array) -> jax.Array:
+    """Ternary scalar product through the cell model.
+
+    The cell produces discharge events on (RBL1, RBL2); we model them and
+    decode, rather than shortcutting to ``i * w``, so tests can check the
+    truth table the same way the paper's Fig. 3 does.
+    """
+    m1 = (w > 0)
+    m2 = (w < 0)
+    rwl1 = (i > 0)
+    rwl2 = (i < 0)
+    # RBL1 discharges when AX1 path (RWL1 & M1) or cross-coupled AX4 path
+    # (RWL2 & M2) conducts; symmetrically for RBL2 (Fig. 2 / Fig. 3(c)).
+    rbl1 = (rwl1 & m1) | (rwl2 & m2)   # "+1" event
+    rbl2 = (rwl1 & m2) | (rwl2 & m1)   # "-1" event
+    return rbl1.astype(jnp.int32) - rbl2.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Block MAC: a/b decomposition + ADC clamp
+# ---------------------------------------------------------------------------
+
+def _block_ab(xb: jax.Array, wb: jax.Array, precision=None):
+    """Per-block event counts.
+
+    xb: (..., KB, B) ternary inputs, wb: (KB, B, N) ternary weights.
+    Returns a, b with shape (..., KB, N): the number of +1 / -1 scalar
+    products per 16-row block per output column (RBL1/RBL2 counts).
+    """
+    p = jnp.einsum("...ki,kin->...kn", xb, wb, precision=precision)
+    m = jnp.einsum("...ki,kin->...kn", jnp.abs(xb), jnp.abs(wb), precision=precision)
+    a = (m + p) * 0.5 if jnp.issubdtype(p.dtype, jnp.floating) else (m + p) // 2
+    b = (m - p) * 0.5 if jnp.issubdtype(p.dtype, jnp.floating) else (m - p) // 2
+    return a, b
+
+
+def _apply_sense_error(partial: jax.Array, key: jax.Array, prob: float) -> jax.Array:
+    """Stochastic sensing-error channel: with probability ``prob`` a block
+    partial reads one ADC level off (+/-1), the adjacent-level error mode
+    that the SM analysis bounds."""
+    ku, ks = jax.random.split(key)
+    flip = jax.random.bernoulli(ku, prob, partial.shape)
+    sign = jax.random.rademacher(ks, partial.shape, dtype=partial.dtype)
+    return partial + flip.astype(partial.dtype) * sign
+
+
+@functools.partial(jax.jit, static_argnames=("config", "precision"))
+def site_cim_matmul(
+    x_t: jax.Array,
+    w_t: jax.Array,
+    config: SiTeCiMConfig = PAPER_CIM_I,
+    key: Optional[jax.Array] = None,
+    precision=None,
+) -> jax.Array:
+    """Signed-ternary MAC with SiTe CiM array semantics.
+
+    Args:
+      x_t: (..., K) ternary inputs in {-1, 0, 1} (any numeric dtype).
+      w_t: (K, N) ternary weights in {-1, 0, 1}.
+      config: array config; ``config.adc_max`` clamps per-block event counts.
+      key: PRNG key for the sensing-error channel (required if
+        ``config.error_prob > 0``).
+
+    Returns:
+      (..., N) integer-valued dot products with per-16-row-block 3-bit ADC
+      saturation: ``sum_blk clip8(a_blk) - clip8(b_blk)``.
+    """
+    k = x_t.shape[-1]
+    block = config.block
+    pad = (-k) % block
+    if pad:
+        x_t = jnp.pad(x_t, [(0, 0)] * (x_t.ndim - 1) + [(0, pad)])
+        w_t = jnp.pad(w_t, [(0, pad), (0, 0)])
+        k += pad
+    kb = k // block
+    xb = x_t.reshape(x_t.shape[:-1] + (kb, block))
+    wb = w_t.reshape((kb, block) + w_t.shape[1:])
+    a, b = _block_ab(xb, wb, precision=precision)
+    adc_max = jnp.asarray(config.adc_max, a.dtype)
+    partial = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
+    if config.error_prob > 0.0:
+        if key is None:
+            raise ValueError("error_prob > 0 requires a PRNG key")
+        partial = _apply_sense_error(partial, key, config.error_prob)
+    # PCU digital accumulation across blocks.
+    return jnp.sum(partial, axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def nm_ternary_matmul(x_t: jax.Array, w_t: jax.Array, precision=None) -> jax.Array:
+    """Near-memory baseline: exact ternary dot product (row-by-row digital
+    MAC — no ADC clamp). Functionally this is a plain matmul; the paper's
+    NM/CiM difference is in latency/energy (core/cost_model.py)."""
+    return jnp.einsum("...k,kn->...n", x_t, w_t, precision=precision)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "precision"))
+def site_cim_matmul_corrected(
+    x_t: jax.Array,
+    w_t: jax.Array,
+    config: SiTeCiMConfig = PAPER_CIM_I,
+    precision=None,
+) -> jax.Array:
+    """Clip-as-correction formulation (DESIGN.md §2, beyond-paper opt).
+
+    exact_dot + sum_blk (relu(b_blk - 8) - relu(a_blk - 8)) — numerically
+    identical to :func:`site_cim_matmul` with error_prob=0, but the bulk
+    contraction is a full-depth MXU matmul; only the (rare) saturation
+    correction needs blocked arithmetic.
+    """
+    k = x_t.shape[-1]
+    block = config.block
+    pad = (-k) % block
+    if pad:
+        x_t = jnp.pad(x_t, [(0, 0)] * (x_t.ndim - 1) + [(0, pad)])
+        w_t = jnp.pad(w_t, [(0, pad), (0, 0)])
+        k += pad
+    exact = jnp.einsum("...k,kn->...n", x_t, w_t, precision=precision)
+    kb = k // block
+    xb = x_t.reshape(x_t.shape[:-1] + (kb, block))
+    wb = w_t.reshape((kb, block) + w_t.shape[1:])
+    a, b = _block_ab(xb, wb, precision=precision)
+    adc_max = jnp.asarray(config.adc_max, a.dtype)
+    corr = jnp.maximum(b - adc_max, 0) - jnp.maximum(a - adc_max, 0)
+    return exact + jnp.sum(corr, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Bitplane (event-counting) reference — mirrors the hardware directly
+# ---------------------------------------------------------------------------
+
+def site_cim_matmul_bitplane(
+    x_t: jax.Array, w_t: jax.Array, config: SiTeCiMConfig = PAPER_CIM_I
+) -> jax.Array:
+    """Event-counting formulation over (M1, M2) bitplanes:
+
+        a = #(RWL1 & M1) + #(RWL2 & M2)   (RBL1 discharge events)
+        b = #(RWL1 & M2) + #(RWL2 & M1)   (RBL2 discharge events)
+
+    Slower on TPU than the matmul form; used as a structural oracle in
+    tests to pin the functional model to the circuit description.
+    """
+    m1 = (w_t > 0).astype(jnp.int32)
+    m2 = (w_t < 0).astype(jnp.int32)
+    r1 = (x_t > 0).astype(jnp.int32)
+    r2 = (x_t < 0).astype(jnp.int32)
+    k = x_t.shape[-1]
+    block = config.block
+    pad = (-k) % block
+    if pad:
+        r1 = jnp.pad(r1, [(0, 0)] * (r1.ndim - 1) + [(0, pad)])
+        r2 = jnp.pad(r2, [(0, 0)] * (r2.ndim - 1) + [(0, pad)])
+        m1 = jnp.pad(m1, [(0, pad), (0, 0)])
+        m2 = jnp.pad(m2, [(0, pad), (0, 0)])
+        k += pad
+    kb = k // block
+
+    def blk(v, lead):
+        if lead:
+            return v.reshape(v.shape[:-1] + (kb, block))
+        return v.reshape((kb, block) + v.shape[1:])
+
+    r1b, r2b = blk(r1, True), blk(r2, True)
+    m1b, m2b = blk(m1, False), blk(m2, False)
+    a = jnp.einsum("...ki,kin->...kn", r1b, m1b) + jnp.einsum("...ki,kin->...kn", r2b, m2b)
+    b = jnp.einsum("...ki,kin->...kn", r1b, m2b) + jnp.einsum("...ki,kin->...kn", r2b, m1b)
+    partial = jnp.minimum(a, config.adc_max) - jnp.minimum(b, config.adc_max)
+    return jnp.sum(partial, axis=-2)

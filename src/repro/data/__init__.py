@@ -1,0 +1,2 @@
+"""Data pipeline."""
+from repro.data.pipeline import DataConfig, TokenPipeline  # noqa: F401

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the SiTe CiM compute hot-spot (the ternary MAC).
+
+  * ternary_mac.py — blocked CiM matmul (a/b decomposition + ADC clamp)
+    and the exact NM-baseline matmul kernel.
+  * packed_mac.py  — bitplane-packed (2-bit) weight variant mirroring the
+    differential M1/M2 memory layout; 8x HBM weight traffic reduction.
+  * ops.py         — jit'd public wrappers (padding, batch dims, STE vjp).
+  * ref.py         — pure-jnp oracles used by the allclose test sweeps.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True.
+"""
+from repro.kernels.ops import cim_matmul, exact_ternary_matmul  # noqa: F401
+from repro.kernels.packed_mac import packed_cim_matmul  # noqa: F401
+from repro.kernels.ternary_mac import (  # noqa: F401
+    ternary_cim_matmul,
+    ternary_exact_matmul,
+)

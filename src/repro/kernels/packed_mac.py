@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: bitplane-packed ternary CiM matmul.
+
+The SiTe CiM cell stores a ternary weight as two binary bit-cells (M1,
+M2). This kernel keeps weights in exactly that differential format, packed
+8-per-byte along K (repro.core.ternary.pack_ternary): two uint8 arrays of
+shape (K/8, N). Per ternary weight that is 2 bits of HBM traffic — 8x
+less than int8 and 16x less than bf16, which is the win in the
+weight-streaming-bound decode regime (see EXPERIMENTS.md §Perf).
+
+In-kernel, the bitplanes are expanded to ternary bf16 in VMEM (cheap VPU
+work overlapped with the MXU) and fed to the same a/b-decomposition CiM
+MAC as kernels/ternary_mac.py.
+
+VMEM budget per grid step, default (bm, bk, bn) = (128, 256, 128):
+  x: 128*256*2 = 64 KiB; packed planes: 2 * (256/8)*128 = 8 KiB;
+  unpacked w: 256*128*2 = 64 KiB; out: 64 KiB; intermediates
+  2*(256/16)*128*128*4 = 2 MiB  -> ~2.2 MiB, fine for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 16
+DEFAULT_ADC_MAX = 8
+
+
+def _unpack_plane(plane: jax.Array) -> jax.Array:
+    """(bk/8, bn) uint8 -> (bk, bn) {0,1} float32 bits, K-major order."""
+    kp, bn = plane.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (kp, 8, bn), 1)
+    bits = (plane[:, None, :] >> shifts) & jnp.uint8(1)
+    return bits.reshape(kp * 8, bn).astype(jnp.float32)
+
+
+def _packed_kernel(x_ref, wp_ref, wn_ref, o_ref, *, sub, adc_max, cim):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    w = _unpack_plane(wp_ref[...]) - _unpack_plane(wn_ref[...])  # (bk, bn)
+    bm, bk = x.shape
+    bn = w.shape[-1]
+    if not cim:
+        o_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return
+    kb = bk // sub
+    xb = x.reshape(bm, kb, sub).swapaxes(0, 1)
+    wb = w.reshape(kb, sub, bn)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    p = jax.lax.dot_general(xb, wb, dims, preferred_element_type=jnp.float32)
+    m = jax.lax.dot_general(
+        jnp.abs(xb), jnp.abs(wb), dims, preferred_element_type=jnp.float32
+    )
+    a = (m + p) * 0.5
+    b = (m - p) * 0.5
+    part = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
+    o_ref[...] += jnp.sum(part, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "adc_max", "cim", "bm", "bk", "bn", "interpret"),
+)
+def packed_cim_matmul(
+    x: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+    cim: bool = True,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K) ternary values; w_pos/w_neg: (K/8, N) packed bitplanes.
+
+    ``cim=True`` applies the per-16-block ADC clamp; ``cim=False`` is the
+    exact (NM-baseline) product from the packed format.
+    """
+    m_dim, k_dim = x.shape
+    kp, n_dim = w_pos.shape
+    assert w_neg.shape == w_pos.shape
+    assert kp * 8 == k_dim, (x.shape, w_pos.shape)
+    assert m_dim % bm == 0 and k_dim % bk == 0 and n_dim % bn == 0
+    assert bk % (8 * block) == 0 or not cim
+    grid = (m_dim // bm, n_dim // bn, k_dim // bk)
+    kernel = functools.partial(
+        _packed_kernel, sub=block, adc_max=float(adc_max), cim=cim
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 8, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // 8, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_pos, w_neg)

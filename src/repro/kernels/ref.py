@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are deliberately simple and allocation-happy; every kernel in this
+package is tested `assert_allclose` against these across shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 16   # N_A: rows asserted per CiM cycle
+DEFAULT_ADC_MAX = 8  # 3-bit flash ADC + extra sense amp
+
+
+def ref_cim_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+) -> jax.Array:
+    """SiTe CiM semantics: per-`block` event counts a/b, clamped at
+    ``adc_max``, accumulated across blocks. x: (M, K) ternary values,
+    w: (K, N) ternary values. Returns f32 (M, N)."""
+    m_, k = x.shape
+    assert k % block == 0, (k, block)
+    kb = k // block
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    xb = xf.reshape(m_, kb, block)
+    wb = wf.reshape(kb, block, -1)
+    p = jnp.einsum("mki,kin->mkn", xb, wb)
+    mm = jnp.einsum("mki,kin->mkn", jnp.abs(xb), jnp.abs(wb))
+    a = (mm + p) * 0.5
+    b = (mm - p) * 0.5
+    part = jnp.minimum(a, float(adc_max)) - jnp.minimum(b, float(adc_max))
+    return jnp.sum(part, axis=1)
+
+
+def ref_exact_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Near-memory baseline: exact ternary matmul in f32."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def ref_packed_matmul(
+    x: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+    cim: bool = True,
+) -> jax.Array:
+    """Oracle for the bitplane-packed kernel.
+
+    w_pos/w_neg: (K // 8, N) uint8 — M1/M2 bitplanes packed 8-per-byte
+    along K (repro.core.ternary.pack_ternary layout).
+    """
+    kp, n = w_pos.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits_p = ((w_pos[:, None, :] >> shifts[None, :, None]) & 1).reshape(kp * 8, n)
+    bits_n = ((w_neg[:, None, :] >> shifts[None, :, None]) & 1).reshape(kp * 8, n)
+    w = bits_p.astype(jnp.float32) - bits_n.astype(jnp.float32)
+    if cim:
+        return ref_cim_matmul(x, w, block=block, adc_max=adc_max)
+    return ref_exact_matmul(x, w)

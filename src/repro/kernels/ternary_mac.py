@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: signed-ternary CiM matmul (a/b decomposition + ADC clamp).
+
+TPU-native formulation of the SiTe CiM array semantics (DESIGN.md §2):
+for each 16-element block of the contraction dimension we need the event
+counts
+
+    a = (|x|·|w| + x·w) / 2,     b = (|x|·|w| - x·w) / 2
+
+clamped at the ADC bound (8) and accumulated. Inside a (bm, bk, bn) tile
+the kernel performs two batched dot_generals with the K-tile split into
+``bk/16`` sub-blocks of 16 (the N_A row-assertion granularity), then the
+elementwise clamp/recombine, accumulating into the output tile across the
+K grid dimension.
+
+VMEM budget per grid step (bf16 in, f32 acc):
+    x tile: bm*bk*2 B, w tile: bk*bn*2 B, out tile: bm*bn*4 B,
+    two (kb, bm, bn) f32 intermediates: 2*(bk/16)*bm*bn*4 B.
+Default (bm, bk, bn) = (128, 128, 128): 32 KiB + 32 KiB + 64 KiB +
+2*8*64 KiB = 1.15 MiB — comfortably inside the ~16 MiB VMEM of a v5e
+core, leaving room for double buffering. All matmul dims are multiples of
+the 128 MXU/lane width except the 16-deep sub-contractions, which are an
+inherent cost of the faithful per-block ADC semantics (the hillclimbed
+variant amortizes them — see kernels/ops.py and EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 16
+DEFAULT_ADC_MAX = 8
+
+
+def _cim_mac_kernel(x_ref, w_ref, o_ref, *, sub: int, adc_max: float, nk: int):
+    """One (i, j, k) grid step: accumulate the CiM partial for this K tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk) ternary values in bf16/f32
+    w = w_ref[...]  # (bk, bn)
+    bm, bk = x.shape
+    bn = w.shape[-1]
+    kb = bk // sub
+
+    # (kb, bm, sub) x (kb, sub, bn) batched over the 16-row sub-blocks.
+    xb = x.reshape(bm, kb, sub).swapaxes(0, 1)
+    wb = w.reshape(kb, sub, bn)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    p = jax.lax.dot_general(xb, wb, dims, preferred_element_type=jnp.float32)
+    m = jax.lax.dot_general(
+        jnp.abs(xb), jnp.abs(wb), dims, preferred_element_type=jnp.float32
+    )
+    a = (m + p) * 0.5
+    b = (m - p) * 0.5
+    part = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
+    o_ref[...] += jnp.sum(part, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "adc_max", "bm", "bk", "bn", "interpret"),
+)
+def ternary_cim_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """CiM ternary matmul. x: (M, K), w: (K, N), values in {-1, 0, 1}.
+
+    Shapes must tile evenly (callers pad; repro.kernels.ops handles this).
+    Returns f32 (M, N) with per-``block`` ADC clamping at ``adc_max``.
+    """
+    m_dim, k_dim = x.shape
+    k2, n_dim = w.shape
+    assert k_dim == k2, (x.shape, w.shape)
+    assert m_dim % bm == 0 and k_dim % bk == 0 and n_dim % bn == 0, (
+        x.shape,
+        w.shape,
+        (bm, bk, bn),
+    )
+    assert bk % block == 0, (bk, block)
+    grid = (m_dim // bm, n_dim // bn, k_dim // bk)
+
+    kernel = functools.partial(
+        _cim_mac_kernel, sub=block, adc_max=float(adc_max), nk=grid[2]
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)
+
+
+def _exact_mac_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret")
+)
+def ternary_exact_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Near-memory baseline kernel: exact ternary matmul with full-depth
+    MXU contractions (no per-block clamp). Also the fast path of the
+    clip-as-correction optimization."""
+    m_dim, k_dim = x.shape
+    _, n_dim = w.shape
+    assert m_dim % bm == 0 and k_dim % bk == 0 and n_dim % bn == 0
+    grid = (m_dim // bm, n_dim // bn, k_dim // bk)
+    return pl.pallas_call(
+        _exact_mac_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

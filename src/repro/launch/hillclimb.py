@@ -1,0 +1,66 @@
+"""Perf-iteration driver (§Perf in EXPERIMENTS.md).
+
+Runs one hillclimb cell — a (arch, shape) pair with config overrides —
+through the dry-run lowering and records the roofline JSON:
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch starcoder2-7b --shape train_4k --name A1 \
+        --quant cim_fused --cfg '{"attn_chunk": 2048}' \
+        --qc '{"pre_quantized": true}' --out results/perf
+
+The methodology (hypothesis -> change -> re-lower -> record) and the full
+iteration log live in EXPERIMENTS.md §Perf.
+"""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+import argparse
+import dataclasses
+import json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--cfg", default=None, help="JSON ArchConfig overrides")
+    ap.add_argument("--qc", default=None, help="JSON QuantConfig overrides")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import lower_cell
+
+    res = lower_cell(
+        args.arch,
+        args.shape,
+        multi_pod=args.multi_pod,
+        quant_mode=args.quant,
+        cfg_overrides=json.loads(args.cfg) if args.cfg else None,
+        quant_overrides=json.loads(args.qc) if args.qc else None,
+        fsdp=args.fsdp,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.name}.json")
+    with open(path, "w") as f:
+        json.dump(dataclasses.asdict(res), f, indent=1)
+    print("saved", path)
+    if res.roofline:
+        r = res.roofline
+        print(
+            f"Tc={r['t_compute_s']:.3e} Tm={r['t_memory_s']:.3e} "
+            f"Tx={r['t_collective_s']:.3e} bottleneck={r['bottleneck']}"
+        )
+        return 0
+    print("ERROR:", res.error)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state). The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import so 512 placeholder CPU devices exist for the 16x16 / 2x16x16
+meshes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_batch_divisor(mesh) -> int:
+    """Product of the data-like axis sizes (batch must divide this to be
+    batch-sharded; shard_act falls back to replicated otherwise)."""
+    d = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            d *= mesh.shape[ax]
+    return d

@@ -1,0 +1,190 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware constants are the assignment's TPU v5e-class numbers. The three
+terms per (arch x shape x mesh):
+
+    T_compute = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    T_memory  = HLO_bytes   / (chips * HBM_BW)
+    T_coll    = coll_bytes  / (chips * ICI_BW)   [per-device link-serialized]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program,
+all partitions; we divide by chip count). Collective bytes are parsed
+from the optimized HLO text with ring-algorithm accounting per op type
+(XLA does not expose them via cost_analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [ngroups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device bytes moved over ICI, by collective type (ring model)."""
+    out: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        opm = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if f"{op}-done" in rhs:
+            continue
+        # result shape(s) are on the lhs of the op name in `rhs` prefix
+        result_part = rhs.split(opm.group(0))[0]
+        nbytes = _shape_bytes(result_part)
+        if nbytes == 0:
+            continue
+        n = _group_size(s, n_devices)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            moved = nbytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            moved = nbytes * (n - 1)            # input = result * n
+        elif op == "all-reduce":
+            moved = 2 * nbytes * (n - 1) / n
+        elif op == "all-to-all":
+            moved = nbytes * (n - 1) / n
+        else:  # collective-permute
+            moved = nbytes
+        out[op] += moved
+    out["total"] = sum(out[o] for o in COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float           # per-device
+    coll_breakdown: Dict[str, float]
+    model_flops: float          # 6*N*D (or 6*N_active*D) useful flops
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to the compute roofline: T_comp / max(T)."""
+        peak = max(self.t_compute, self.t_memory, self.t_collective, 1e-30)
+        return self.t_compute / peak
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.bytes_accessed,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def model_flops_estimate(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference tokens
+    (N = active params)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.batch
+
+
+def fmt_table(rows) -> str:
+    hdr = (
+        f"{'arch':<18} {'shape':<12} {'mesh':<10} {'Tcomp(s)':>10} {'Tmem(s)':>10} "
+        f"{'Tcoll(s)':>10} {'bneck':>10} {'roofl%':>7} {'useful%':>8}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<18} {r.shape:<12} {r.mesh:<10} {r.t_compute:>10.3e} "
+            f"{r.t_memory:>10.3e} {r.t_collective:>10.3e} {r.bottleneck:>10} "
+            f"{100*r.roofline_fraction:>6.1f} {100*r.useful_flops_ratio:>7.1f}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,1 @@
+"""Model zoo: functional JAX models for the 10 assigned architectures."""

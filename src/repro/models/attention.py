@@ -1,0 +1,290 @@
+"""Attention: GQA (llama-family) and MLA (deepseek-v2), with KV caches.
+
+Weight-bearing projections route through ``layers.dense`` so the paper's
+ternary/CiM modes apply; the score/value contractions are
+activation-activation products and stay bf16 in every mode (CiM is a
+weight-stationary paradigm — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, H_kv, Dh)
+    v: jax.Array  # (B, S_max, H_kv, Dh)
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+        return KVCache(
+            jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+            jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+        )
+
+
+class MLACache(NamedTuple):
+    """Compressed MLA cache: latent kv (B, S, kv_lora) + rope key (B, S, Dr)."""
+    ckv: jax.Array
+    k_rope: jax.Array
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, kv_lora: int, rope_dim: int, dtype=jnp.bfloat16):
+        return MLACache(
+            jnp.zeros((batch, s_max, kv_lora), dtype),
+            jnp.zeros((batch, s_max, rope_dim), dtype),
+        )
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense_weight(ks[0], (d, h * hd), dtype=dtype),
+        "wk": L.init_dense_weight(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": L.init_dense_weight(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": L.init_dense_weight(ks[3], (h * hd, d), dtype=dtype),
+    }
+
+
+def _sdpa(q, k, v, causal_offset: Optional[int], length: Optional[jax.Array] = None):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dh). GQA via head grouping.
+
+    causal_offset: position of q[0] relative to k[0] (None = no mask).
+    length: valid KV length for decode (mask out beyond).
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    # Context parallelism: shard QUERY rows over the model axis. Head
+    # counts rarely divide a 16-way axis (starcoder2: 36 heads), in which
+    # case the partitioner replicates the whole score computation; query
+    # rows always divide for the training/prefill shapes and each row's
+    # softmax is independent. (No-op when activation sharding is off or
+    # sq doesn't divide.)
+    from repro.dist.sharding import model_axis_size, shard_act
+
+    msize = model_axis_size()
+    if msize > 1 and sq % msize == 0 and sq > msize:
+        qg = shard_act(qg, "bqhgd_sp")
+    # bf16 operands, f32 accumulation (MXU-native; avoids materializing an
+    # f32 copy of the KV cache) — see layers.accum_einsum
+    scores = L.accum_einsum("bqhgd,bkhd->bhgqk", qg, k.astype(qg.dtype))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if causal_offset is not None:
+        qpos = jnp.arange(sq)[:, None] + causal_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if length is not None:
+        valid = jnp.arange(sk)[None, :] < length[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_chunked(q, k, v, chunk: int):
+    """Flash-style causal attention: scan over KV chunks with an online
+    softmax — never materializes the (B, H, Sq, Sk) score matrix. Used for
+    long training/prefill sequences (cfg.attn_chunk); numerics match
+    :func:`_sdpa` to fp tolerance (tests/test_models.py)."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert sk % chunk == 0, (sk, chunk)
+    nc = sk // chunk
+    qg = q.reshape(b, sq, hkv, g, dh)
+    kc = k.reshape(b, nc, chunk, hkv, dh)
+    vc = v.reshape(b, nc, chunk, hkv, dh)
+    qpos = jnp.arange(sq)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = blk                       # (b, chunk, hkv, dh), idx
+        s = L.accum_einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(qg.dtype))
+        s = s / jnp.sqrt(dh).astype(jnp.float32)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + L.accum_einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc)),
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return jnp.moveaxis(out, -2, 1).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def gqa_attention(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, D). With a cache: decode/prefill-append mode — new KV
+    written at ``cache_index``; attention runs against the whole cache."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    qc = cfg.quant
+    q = L.dense(x, params["wq"], qc).reshape(b, s, h, hd)
+    k = L.dense(x, params["wk"], qc).reshape(b, s, hkv, hd)
+    v = L.dense(x, params["wv"], qc).reshape(b, s, hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
+            out = _sdpa_chunked(q, k, v, cfg.attn_chunk)
+        else:
+            out = _sdpa(q, k, v, causal_offset=0)
+        new_cache = None
+    else:
+        k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, cache_index, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, cache_index, 0, 0))
+        # Return only the new-token KV: the caller owns the stacked cache
+        # and writes just this slice (avoids restacking the full per-layer
+        # cache through the layer scan — decode HBM traffic stays
+        # O(read cache + write one token), see DESIGN.md).
+        new_cache = KVCache(k.astype(cache.k.dtype), v.astype(cache.v.dtype))
+        length = jnp.full((b,), cache_index + s, jnp.int32)
+        out = _sdpa(q, k_all, v_all, causal_offset=cache_index, length=length)
+    out = out.reshape(b, s, h * hd)
+    return L.dense(out, params["wo"], qc), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank joint KV compression + decoupled rope key
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # queries (full rank — q_lora omitted when q_lora_rank == 0)
+        "wq": L.init_dense_weight(ks[0], (d, h * (dn + dr)), dtype=dtype),
+        # joint KV down-projection + decoupled rope key
+        "w_dkv": L.init_dense_weight(ks[1], (d, r + dr), dtype=dtype),
+        # up-projections from the latent
+        "w_uk": L.init_dense_weight(ks[2], (r, h * dn), dtype=dtype),
+        "w_uv": L.init_dense_weight(ks[3], (r, h * dv), dtype=dtype),
+        "wo": L.init_dense_weight(ks[4], (h * dv, d), dtype=dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+    }
+    return p
+
+
+def mla_attention(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[MLACache] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[MLACache]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qc = cfg.quant
+
+    q = L.dense(x, params["wq"], qc).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = L.dense(x, params["w_dkv"], qc)
+    ckv, k_rope = dkv[..., :r], dkv[..., r:]
+    ckv = L.rms_norm(ckv, params["kv_norm"])
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache.ckv, ckv.astype(cache.ckv.dtype), (0, cache_index, 0))
+        krope_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache_index, 0))
+        # new-token slices only; caller writes them into the stacked cache
+        new_cache = MLACache(ckv.astype(cache.ckv.dtype), k_rope.astype(cache.k_rope.dtype))
+        offset = cache_index
+        sk = ckv_all.shape[1]
+        length = jnp.full((b,), cache_index + s, jnp.int32)
+    else:
+        ckv_all, krope_all, new_cache, offset, sk, length = ckv, k_rope, None, 0, s, None
+
+    # Absorbed-weight form: score = q_nope^T W_uk ckv + q_rope^T k_rope.
+    # (decode-efficient: cache stays compressed; W_uk is absorbed into q.)
+    # bf16 operands + f32 accumulation: no f32 copy of the latent cache.
+    w_uk = params["w_uk"].reshape(r, h, dn).astype(x.dtype)
+    q_lat = L.accum_einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scores = L.accum_einsum("bqhr,bkr->bhqk", q_lat.astype(x.dtype),
+                            ckv_all.astype(x.dtype))
+    scores = scores + L.accum_einsum(
+        "bqhd,bkd->bhqk", q_rope, krope_all.astype(q_rope.dtype))
+    scores = scores / jnp.sqrt(dn + dr).astype(jnp.float32)
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    scores = jnp.where((kpos <= qpos)[None, None], scores, -1e30)
+    if length is not None:
+        valid = jnp.arange(sk)[None, :] < length[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    # values from the latent: v = ckv W_uv, attended in latent space first.
+    lat = L.accum_einsum("bhqk,bkr->bqhr", probs.astype(x.dtype),
+                         ckv_all.astype(x.dtype))
+    w_uv = params["w_uv"].reshape(r, h, dv).astype(x.dtype)
+    out = L.accum_einsum("bqhr,rhd->bqhd", lat.astype(x.dtype), w_uv)
+    out = out.reshape(b, s, h * dv).astype(x.dtype)
+    return L.dense(out, params["wo"], qc), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense_weight(ks[0], (d, h * hd), dtype=dtype),
+        "wk": L.init_dense_weight(ks[1], (d, h * hd), dtype=dtype),
+        "wv": L.init_dense_weight(ks[2], (d, h * hd), dtype=dtype),
+        "wo": L.init_dense_weight(ks[3], (h * hd, d), dtype=dtype),
+    }
+
+
+def cross_attention(params, x: jax.Array, enc: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, s, d = x.shape
+    se = enc.shape[1]
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    qc = cfg.quant
+    q = L.dense(x, params["wq"], qc).reshape(b, s, h, hd)
+    k = L.dense(enc, params["wk"], qc).reshape(b, se, h, hd)
+    v = L.dense(enc, params["wv"], qc).reshape(b, se, h, hd)
+    out = _sdpa(q, k, v, causal_offset=None)
+    return L.dense(out.reshape(b, s, h * hd), params["wo"], qc)

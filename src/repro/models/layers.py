@@ -1,0 +1,254 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+Every weight-bearing matmul flows through :func:`dense`, which implements
+the paper's technique as a first-class mode switch:
+
+  * quant_mode="off"     — bf16/f32 matmul (fp baseline),
+  * quant_mode="ternary" — STE-ternarized weights & activations, exact
+                           matmul (the software-level ternary DNN the
+                           paper's accelerator executes),
+  * quant_mode="cim"     — STE-ternarized weights & activations computed
+                           with the SiTe CiM array semantics (16-row block
+                           ADC clamp) via repro.kernels.ops.cim_matmul.
+
+Scales: output = (x_t @ w_t) * sx * sw  — per-tensor activation scale,
+per-output-channel weight scale, both folded after the ternary MAC, which
+is exactly where the TiM-DNN peripheral applies them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as tern
+from repro.kernels import ops as kops
+
+Param = jax.Array
+
+# --- einsum accumulation strategy -----------------------------------------
+# TPU MXU consumes bf16 operands with f32 accumulation natively
+# (preferred_element_type) — no f32 copies of big operands (KV caches!).
+# XLA:CPU *compiles* that form but cannot execute it, so CPU execution
+# falls back to f32 casts. The dry-run (compile-only) forces native mode
+# to produce the TPU-target HLO.
+_NATIVE_ACCUM: bool | None = None  # None = auto (native unless CPU)
+
+
+def set_native_accum(on: bool | None) -> None:
+    global _NATIVE_ACCUM
+    _NATIVE_ACCUM = on
+
+
+def _native() -> bool:
+    if _NATIVE_ACCUM is not None:
+        return _NATIVE_ACCUM
+    return jax.default_backend() != "cpu"
+
+
+def accum_einsum(spec: str, *ops: jax.Array) -> jax.Array:
+    """einsum with f32 accumulation; bf16-native on TPU, f32-cast on CPU."""
+    if _native():
+        return jnp.einsum(spec, *ops, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, *[o.astype(jnp.float32) for o in ops])
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Paper-technique mode switch.
+
+    mode:
+      off       — fp baseline.
+      ternary   — STE-quantized weights/activations, exact matmul (the
+                  software-level ternary DNN).
+      cim       — SiTe CiM array semantics via the blocked jnp formulation
+                  (bit-exact per-16-block ADC clamp). XLA materializes the
+                  (tokens, K/16, N) block intermediates in HBM — this is
+                  the faithful *naive* lowering and the §Perf baseline.
+      cim_fused — cost-faithful stand-in for the Pallas CiM kernel
+                  (kernels/ternary_mac.py): two full-depth dots (signed +
+                  magnitude) + elementwise combine; on TPU the per-block
+                  clamp happens inside the kernel's VMEM tiles, so no
+                  block intermediates reach HBM. Clamp numerics are
+                  validated against the oracle in tests/test_kernels.py;
+                  this mode's HLO reproduces the kernel's FLOP/byte
+                  structure for the dry-run/roofline.
+    """
+    mode: str = "off"            # off | ternary | cim | cim_fused
+    block: int = 16              # N_A rows per CiM cycle
+    adc_max: int = 8             # 3-bit ADC + extra SA
+    quantize_activations: bool = True
+    corrected: bool = False      # clip-as-correction formulation (perf opt)
+    # Serving: weights were ternarized offline (quant.prepare) — skip the
+    # per-step STE re-quantization (which costs ~4 passes over every
+    # weight). Per-channel scales are folded into the stored weights.
+    pre_quantized: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("off", "ternary", "cim", "cim_fused"):
+            raise ValueError(self.mode)
+
+
+def _ternarize_weight(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-channel (last dim) ternarization with STE.
+
+    Returns (w_t, scale) where w_t in {-1,0,1} and scale has shape (1, N).
+    Gradients flow straight-through to the latent fp weight.
+    """
+    t, scale = tern.ternarize(w, axis=tuple(range(w.ndim - 1)))
+    # STE: forward EXACTLY t (w + sg(t - w) is not value-exact in bf16 —
+    # the rounding perturbs the CiM event counts), backward identity.
+    w_t = t + (w - jax.lax.stop_gradient(w))
+    return w_t, jax.lax.stop_gradient(scale)
+
+
+def _ternarize_act(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor activation ternarization with STE; returns (x_t, scale)."""
+    t, scale = tern.ternarize(x)
+    x_t = t + (x - jax.lax.stop_gradient(x))  # value-exact STE
+    return x_t, jax.lax.stop_gradient(scale)
+
+
+def dense(
+    x: jax.Array,
+    w: jax.Array,
+    qc: QuantConfig,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The mode-switched linear layer. x: (..., K), w: (K, N)."""
+    if qc.mode == "off":
+        out = x @ w.astype(x.dtype)
+    else:
+        if qc.pre_quantized:
+            # weights were ternarized offline with the per-channel scale
+            # folded in (values in {-s_n, 0, +s_n}); recover (t, s) with a
+            # single max-reduce — the CiM event counts need pure {-1,0,1}
+            # operands, and this is one pass over w instead of the ~4 the
+            # STE threshold quantizer costs.
+            sw = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+            w_t = w / jnp.maximum(sw, jnp.asarray(1e-12, w.dtype))
+            sw = jax.lax.stop_gradient(sw)
+        else:
+            w_t, sw = _ternarize_weight(w)
+        if qc.quantize_activations:
+            x_t, sx = _ternarize_act(x)
+        else:
+            x_t, sx = x, jnp.ones((), x.dtype)
+        if qc.mode == "ternary":
+            # cast straight back to the activation dtype: cross-shard
+            # partial-sum reductions (TP contractions) then move bf16, not
+            # f32 — halves the all-reduce payload (§Perf A4)
+            # bf16-out dot: the TP partial-sum all-reduce then moves bf16
+            # (XLA emits the reduction at the dot's output dtype; a cast
+            # after the dot does NOT narrow it — measured, §Perf A4)
+            out = jnp.einsum("...k,kn->...n", x_t.astype(x.dtype), w_t.astype(x.dtype))
+        elif qc.mode == "cim_fused":
+            # Pallas-kernel cost structure: p = x.w, m = |x|.|w|, combine.
+            # Equals the exact product numerically (clamp handled in-kernel
+            # on TPU: every 16-row block lives wholly inside one shard of a
+            # K-sharded contraction, so local clamping commutes with the
+            # cross-shard reduction); `minimum` with a large bound keeps
+            # XLA from folding the magnitude dot away. bf16 casts keep the
+            # TP all-reduces at half width. NOTE: XLA still reduces both p
+            # and m across shards, which the real kernel does not (it
+            # reduces one combined tensor) — the collective term for
+            # K-sharded cim layers is therefore an upper bound (<= 2x).
+            p = jnp.einsum("...k,kn->...n", x_t.astype(x.dtype), w_t.astype(x.dtype))
+            m = jnp.einsum(
+                "...k,kn->...n", jnp.abs(x_t).astype(x.dtype), jnp.abs(w_t).astype(x.dtype)
+            )
+            big = jnp.asarray(2.0**14, jnp.float32)
+            pf, mf = p.astype(jnp.float32), m.astype(jnp.float32)
+            out = jnp.minimum((mf + pf) * 0.5, big) - jnp.minimum((mf - pf) * 0.5, big)
+        else:  # cim
+            out = kops.cim_matmul(
+                x_t.astype(jnp.float32), w_t.astype(jnp.float32),
+                qc.block, qc.adc_max,
+            )
+        # fold scales in the output dtype: an f32 round-trip here makes
+        # every backward cotangent (and its all-reduce) f32 (§Perf A5)
+        out = out.astype(x.dtype) * (sx * sw).astype(x.dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array, qc: QuantConfig) -> jax.Array:
+    # The unembedding is a dense layer too; ternary mode applies when the
+    # config enables it (logit layers are usually kept high precision —
+    # controlled by the arch config's `quantize_unembed`).
+    return dense(x, table.T, qc)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, Dh), positions: (B, S) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)           # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def mlp(params, x: jax.Array, qc: QuantConfig) -> jax.Array:
+    g = dense(x, params["w_gate"], qc)
+    u = dense(x, params["w_up"], qc)
+    return dense(swiglu(g, u), params["w_down"], qc)
+
+
+def init_dense_weight(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = shape[0] if fan_in is None else fan_in
+    return (jax.random.normal(key, shape) * fan_in ** -0.5).astype(dtype)

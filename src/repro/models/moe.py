@@ -1,0 +1,163 @@
+"""Token-choice top-k Mixture-of-Experts (deepseek-v2 / grok-1 style).
+
+Dispatch uses the capacity-buffer scatter formulation (Switch-style):
+tokens are scattered into a per-expert (E, C, D) buffer, expert FFNs run
+as one batched einsum over E (the expert dimension shards over the
+``model``/``expert`` mesh axis), and outputs are gathered back and
+combined with the router gates. Overflowing tokens are dropped (standard
+capacity-factor semantics); the residual path keeps them alive.
+
+Expert FFN weights route through the ternary/CiM ``dense`` modes like any
+other weight-bearing matmul (expert weights live in CiM arrays; routing
+stays digital — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def moe_capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.moe_capacity_factor / cfg.n_experts)
+    return max(cap, 8)
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.init_dense_weight(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * d**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * f**-0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, cfg.expert_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _expert_ffn(params, xe: jax.Array, qc: L.QuantConfig) -> jax.Array:
+    """xe: (G, E, C, D) -> (G, E, C, D), batched over (groups, experts).
+
+    Ternary modes quantize each expert weight per-channel; the batched
+    einsum keeps the expert (or capacity) dim sharded.
+    """
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if qc.mode != "off":
+        wg, wu, wd = _tern3(wg), _tern3(wu), _tern3(wd)
+
+    def emm(x_, w_, spec):
+        if qc.mode in ("cim", "cim_fused"):
+            # kernel cost structure for expert weights held in CiM arrays
+            # (blocked jnp form would create 5-D intermediates; the Pallas
+            # kernel clamps per 16-block inside VMEM — see layers.dense)
+            p = jnp.einsum(spec, x_, w_.astype(x_.dtype))
+            m = jnp.einsum(spec, jnp.abs(x_), jnp.abs(w_).astype(x_.dtype))
+            big = jnp.asarray(2.0**14, jnp.float32)
+            pf, mf = p.astype(jnp.float32), m.astype(jnp.float32)
+            out = jnp.minimum((mf + pf) * 0.5, big) - jnp.minimum((mf - pf) * 0.5, big)
+            return out.astype(x_.dtype)
+        return jnp.einsum(spec, x_, w_.astype(x_.dtype))
+
+    g = emm(xe, wg, "gecd,edf->gecf")
+    u = emm(xe, wu, "gecd,edf->gecf")
+    h = L.swiglu(g, u)
+    return emm(h, wd, "gecf,efd->gecd")
+
+
+def _tern3(w: jax.Array) -> jax.Array:
+    """Per-expert, per-out-channel ternarization with STE for (E, in, out).
+
+    The per-column scale is folded back into the ternary weight so the
+    batched expert einsum stays a single op (the CiM array applies the
+    column scales in its digital periphery)."""
+    from repro.core import ternary as tern
+
+    t, scale = tern.ternarize(w, axis=(1,))
+    w_t = t + (w - jax.lax.stop_gradient(w))  # value-exact STE
+    return w_t * jax.lax.stop_gradient(scale)
+
+
+def moe_block(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    Grouped (hierarchical) dispatch: tokens are partitioned into G groups
+    aligned with the data-parallel shards, each group routes into its own
+    per-expert capacity slice, and all routing arithmetic (cumsum,
+    scatter, gather) stays *local to the group*. A global cumsum/scatter
+    over the full token dim forces the partitioner into cross-device
+    gathers (observed: 25x expert overcompute + a 56 TB all-reduce on
+    grok-1 train — EXPERIMENTS.md §Perf). The expert einsum batches over
+    (G, E) with E sharded over 'model' when divisible, else the capacity
+    dim.
+    """
+    from repro.dist.sharding import batch_axes, model_axis_size, shard_act, _ACT_AXES
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    qc = cfg.quant
+    t = b * s
+    groups = 1
+    if _ACT_AXES is not None:
+        div = _ACT_AXES.get("divisor", 1)
+        if div > 1 and b % div == 0:
+            groups = div
+    tg = t // groups
+    cap = moe_capacity(tg, cfg)
+    xt = shard_act(x.reshape(groups, tg, d), "btd")
+
+    logits = L.accum_einsum("gtd,de->gte", xt, params["router"].astype(xt.dtype))
+    gates = jax.nn.softmax(logits, axis=-1)                     # (G, Tg, E)
+    top_g, top_e = jax.lax.top_k(gates, k)                      # (G, Tg, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(groups, tg * k)                      # (G, Tg*K)
+    flat_g = top_g.reshape(groups, tg * k)
+    tok_id = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (groups, tg * k))
+
+    # position within the expert's group-local buffer (group-local cumsum)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (G, Tg*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # overflow slot
+
+    buf = jnp.zeros((groups, e * cap + 1, d), xt.dtype)
+    gathered_in = jnp.take_along_axis(xt, tok_id[..., None], axis=1)
+    buf = jax.vmap(lambda bu, sl, v: bu.at[sl].set(v))(buf, slot, gathered_in)
+    xe = buf[:, : e * cap].reshape(groups, e, cap, d)
+
+    msize = model_axis_size()
+    if e % max(msize, 1) == 0:
+        xe = shard_act(xe, "gecd")
+    elif cap % max(msize, 1) == 0:
+        xe = shard_act(xe, "gecd_cap")
+
+    ye = _expert_ffn(params, xe, qc).reshape(groups, e * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((groups, 1, d), ye.dtype)], axis=1)
+    out_g = jnp.take_along_axis(ye, slot[..., None], axis=1)
+    out_g = out_g * (flat_g * keep.astype(jnp.float32))[..., None].astype(ye.dtype)
+    out = jnp.zeros_like(xt)
+    out = jax.vmap(lambda o, ti, v: o.at[ti].add(v))(out, tok_id, out_g)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp(params["shared"], xt.reshape(t, d), qc).reshape(groups, tg, d)
+    return out.reshape(b, s, d)
+
+
+def router_aux_loss(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(gates, axis=-1)
+    me = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), axis=0)
+    pe = jnp.mean(gates, axis=0)
+    return cfg.n_experts * jnp.sum(me * pe)

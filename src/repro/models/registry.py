@@ -1,0 +1,100 @@
+"""Architecture registry: --arch <id> -> config, shape cells, input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS = (
+    "smollm-135m",
+    "starcoder2-7b",
+    "starcoder2-15b",
+    "yi-34b",
+    "mamba2-780m",
+    "zamba2-2.7b",
+    "deepseek-v2-236b",
+    "grok-1-314b",
+    "whisper-large-v3",
+    "llava-next-34b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeCell) -> Optional[str]:
+    """None if the (arch, shape) cell runs; otherwise the skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (DESIGN.md §5)"
+        )
+    return None
+
+
+def all_cells(smoke: bool = False):
+    """Yield (arch, shape_cell, skip_reason)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=smoke)
+        for shape in SHAPES.values():
+            yield arch, shape, cell_supported(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — no allocation; dry-run currency)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for a cell, as ShapeDtypeStructs.
+
+    train:   full (B, S) token/label batch.
+    prefill: (B, S) tokens, logits out.
+    decode:  (B, 1) new token; KV caches are supplied separately
+             (see repro.launch.dryrun.decode_cache_specs).
+    """
+    i32 = jnp.int32
+    b, s = shape.batch, shape.seq
+    if shape.kind in ("train", "prefill"):
+        n_img = cfg.n_image_tokens if cfg.family == "vlm" else 0
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s - n_img), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s - n_img), i32)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct((b, n_img, cfg.d_vision), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "encdec":
+        specs["enc"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return specs

@@ -1,0 +1,3 @@
+"""Optimizers, schedules, gradient compression."""
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update  # noqa: F401
+from repro.optim import schedules, compress  # noqa: F401

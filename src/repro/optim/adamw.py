@@ -1,0 +1,83 @@
+"""AdamW in pure JAX (pytree-native, shard-friendly).
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the same
+partition specs apply (dist.sharding.param_specs) — optimizer state
+shards wherever its parameter shards, plus optionally over 'data'
+(ZeRO-1) via the launcher's out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None  # step -> lr scale
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamWState:
+    # mu and nu must be distinct buffers (donation-safe).
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def update(
+    cfg: AdamWConfig, grads: PyTree, state: AdamWState, params: PyTree
+) -> Tuple[PyTree, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(leaf, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), gnorm

@@ -1,0 +1,97 @@
+"""Gradient compression for cross-pod reduction (distributed-opt trick).
+
+At multi-pod scale the inter-pod links are the scarcest resource. These
+utilities compress gradients *before* the cross-pod reduction and decode
+after:
+
+  * int8 per-leaf linear quantization with stochastic rounding (unbiased),
+  * bf16 cast (cheap 2x),
+  * error-feedback residual accumulation so compression error does not
+    bias long-run training (Karimireddy et al. style).
+
+Scope note: under pjit autodiff XLA inserts the gradient all-reduce
+inside the backward pass at the gradient dtype, so this module's
+encode/decode round trip models the *numerics* (quantization error +
+error feedback) of a compressed reduction. Actually narrowing the wire
+format requires expressing the reduction as an explicit collective over
+locally encoded payloads — provided by
+``repro.dist.collectives.compressed_psum_int8`` (shard_map) and tested on
+a multi-device mesh in tests/test_collectives.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Int8Encoded(NamedTuple):
+    values: jax.Array   # int8 payload
+    scale: jax.Array    # f32 per-leaf scale
+
+
+def encode_int8(g: jax.Array, key: jax.Array) -> Int8Encoded:
+    """Unbiased stochastic-rounding int8 quantization (per-leaf scale)."""
+    gf = g.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12)
+    scale = amax / 127.0
+    scaled = gf / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return Int8Encoded(q, scale)
+
+
+def decode_int8(enc: Int8Encoded, dtype=jnp.float32) -> jax.Array:
+    return (enc.values.astype(jnp.float32) * enc.scale).astype(dtype)
+
+
+def tree_encode_int8(grads: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    enc = [encode_int8(g, k) for g, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, enc)
+
+
+def tree_decode_int8(enc_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        decode_int8, enc_tree, is_leaf=lambda x: isinstance(x, Int8Encoded)
+    )
+
+
+def compress_grads(
+    grads: PyTree,
+    method: Optional[str],
+    key: Optional[jax.Array] = None,
+    residual: Optional[PyTree] = None,
+) -> Tuple[PyTree, Optional[PyTree]]:
+    """Apply compression with optional error feedback.
+
+    Returns (decoded_grads, new_residual). The round trip models the
+    numerics of a compressed all-reduce; under pjit the encode/decode pair
+    straddles the reduction so the collective payload is the small dtype.
+    """
+    if method is None or method == "none":
+        return grads, residual
+    if residual is not None:
+        grads = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual
+        )
+    if method == "bf16":
+        dec = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+    elif method == "int8":
+        assert key is not None
+        enc = tree_encode_int8(grads, key)
+        dec = tree_decode_int8(enc)
+    else:
+        raise ValueError(method)
+    new_residual = jax.tree.map(
+        lambda g, d: g.astype(jnp.float32) - d.astype(jnp.float32), grads, dec
+    )
+    return dec, new_residual
+
+
+def init_residual(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

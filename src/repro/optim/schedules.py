@@ -1,0 +1,35 @@
+"""LR schedules as pure step -> scale functions (multiplied onto cfg.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_warmup(warmup: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return jnp.minimum(1.0, s / max(warmup, 1))
+
+    return f
+
+
+def warmup_cosine(warmup: int, total: int, min_scale: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_scale + (1 - min_scale) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return f
+
+
+def inverse_sqrt(warmup: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.minimum(s / max(warmup, 1), jnp.sqrt(warmup / s))
+
+    return f

@@ -1,0 +1,2 @@
+"""Quantization preparation: offline ternarization + 2-bit packing."""
+from repro.quant.prepare import pack_params, ternarize_params  # noqa: F401

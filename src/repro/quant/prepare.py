@@ -1,0 +1,80 @@
+"""Offline model surgery for ternary serving.
+
+``ternarize_params`` walks a trained parameter tree and replaces every
+weight that the ternary/CiM dense path would quantize with its ternary
+value times the per-channel scale (folded), so serving with
+``QuantConfig(pre_quantized=True)`` skips the per-step STE re-quantization
+entirely — the paper's deployment model (weights are programmed into the
+CiM arrays once, not re-derived every inference).
+
+``pack_params`` additionally converts the folded ternary weights to the
+2-bit differential bitplane format (repro.core.ternary.pack_ternary),
+the storage layout of the SiTe cell (M1/M2) and of the packed Pallas
+kernel — 8x less HBM weight traffic than int8.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as tern
+from repro.dist.sharding import tree_paths
+
+PyTree = Any
+
+# weights the ternary dense path quantizes (matches layers/attention/moe)
+_QUANT_RE = re.compile(
+    r"(^|/)(wq|wk|wv|wo|w_dkv|w_uk|w_uv|w_in|w_out|w_gate|w_up|w_down|projector)$"
+)
+_NO_QUANT_RE = re.compile(r"(^|/)(embed|unembed|router|conv_w|conv_b)($|/)")
+
+
+def _is_quantized_weight(path: str, leaf) -> bool:
+    return bool(_QUANT_RE.search(path)) and leaf.ndim >= 2 and not _NO_QUANT_RE.search(path)
+
+
+def ternarize_params(params: PyTree) -> PyTree:
+    """Fold ternarization into the stored weights (scale * {-1,0,1})."""
+    flat = tree_paths(params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for (path, leaf), orig in zip(flat, leaves):
+        if _is_quantized_weight(path, leaf):
+            # quantize over the contraction dim ONLY: stacked-layer leaves
+            # are (L, K, N) and dense() sees per-layer (K, N) slices, so
+            # thresholds/scales must be per-(layer, out-channel)
+            axis = (leaf.ndim - 2,)
+            t, scale = tern.ternarize(leaf, axis=axis)
+            out.append((t * scale).astype(leaf.dtype))
+        else:
+            out.append(orig)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pack_params(params: PyTree) -> Tuple[PyTree, Dict[str, jax.Array]]:
+    """Ternarize and 2-bit-pack the quantizable weights.
+
+    Returns (params_with_scales, packed) where ``packed`` maps each weight
+    path to (pos_plane, neg_plane, scale). The dense path consumes these
+    via kernels.packed_cim_matmul on TPU.
+    """
+    flat = tree_paths(params)
+    packed: Dict[str, jax.Array] = {}
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for (path, leaf), orig in zip(flat, leaves):
+        # pack along the contraction (second-to-last) dim; stacked-layer
+        # weights are (L, K, N), plain ones (K, N)
+        k_axis = leaf.ndim - 2
+        if _is_quantized_weight(path, leaf) and leaf.shape[k_axis] % 8 == 0:
+            axis = (k_axis,)
+            t, scale = tern.ternarize(leaf, axis=axis)
+            p1, p2 = tern.pack_ternary(t.astype(jnp.int8), axis=k_axis)
+            packed[path] = (p1, p2, scale)
+            out.append((t * scale).astype(leaf.dtype))
+        else:
+            out.append(orig)
+    return jax.tree_util.tree_unflatten(treedef, out), packed

@@ -1,0 +1,5 @@
+"""Serving engine: prefill/decode, sampling, continuous batching."""
+from repro.serve.engine import (  # noqa: F401
+    ContinuousBatcher, Request, generate, make_jit_serve_step, prefill,
+    sample, serve_step,
+)

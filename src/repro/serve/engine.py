@@ -1,0 +1,205 @@
+"""Serving: prefill/decode steps, sampling, and a continuous batcher.
+
+``serve_step`` is the unit the dry-run lowers for the decode shape cells:
+one new token for every sequence in the batch against a seq_len-deep KV
+cache. ``prefill`` reuses the same cached block path with S > 1.
+
+The ``ContinuousBatcher`` keeps a fixed pool of slots; finished sequences
+are immediately replaced from the queue (slot-level continuous batching,
+the standard production serving discipline), demonstrated end-to-end in
+examples/serve_ternary.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+PyTree = Any
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.0) -> jax.Array:
+    """logits: (B, 1, V) -> token ids (B, 1)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    flat = scaled[:, 0, :]
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks[:, None].astype(jnp.int32)
+
+
+def prefill(
+    params, tokens: jax.Array, caches, cfg: ArchConfig, enc: Optional[jax.Array] = None
+) -> Tuple[jax.Array, PyTree]:
+    """Run the prompt through the cached path (index 0). Returns
+    (last_logits (B, 1, V), caches)."""
+    logits, caches = T.decode_step(params, tokens, caches, jnp.int32(0), cfg, enc)
+    return logits[:, -1:, :], caches
+
+
+def serve_step(
+    params,
+    tokens: jax.Array,
+    caches,
+    index: jax.Array,
+    cfg: ArchConfig,
+    enc: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, PyTree]:
+    """One decode step: tokens (B, 1) at cache position ``index``."""
+    return T.decode_step(params, tokens, caches, index, cfg, enc)
+
+
+def make_jit_serve_step(cfg: ArchConfig, donate_caches: bool = True):
+    def f(params, tokens, caches, index, enc=None):
+        return serve_step(params, tokens, caches, index, cfg, enc)
+
+    return jax.jit(f, donate_argnums=(2,) if donate_caches else ())
+
+
+def generate(
+    params,
+    prompt: jax.Array,
+    cfg: ArchConfig,
+    max_new: int = 16,
+    s_max: int = 128,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+    enc: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy/temperature generation (host loop — example/test path)."""
+    b, s0 = prompt.shape
+    caches = T.init_caches(cfg, b, s_max)
+    logits, caches = prefill(params, prompt, caches, cfg, enc)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    step_fn = make_jit_serve_step(cfg)
+    out = []
+    tok = sample(logits, key, temperature)
+    out.append(tok)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        logits, caches = step_fn(params, tok, caches, jnp.int32(s0 + i), enc)
+        tok = sample(logits, sub, temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-pool continuous batcher over the jitted serve step.
+
+    Each slot owns a cache region (per-slot caches batched along axis 0 of
+    every cache leaf). Finished slots are refilled without stalling the
+    others; per-slot position indices make the single fused decode step
+    valid for heterogeneous progress.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, n_slots: int = 4, s_max: int = 128):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.caches = T.init_caches(cfg, n_slots, s_max)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = jnp.zeros((n_slots,), jnp.int32)
+        self.queue: List[Request] = []
+        self._decode = self._build_decode()
+
+    def _build_decode(self):
+        cfg = self.cfg
+
+        def step(params, tokens, caches, positions):
+            # Slots progress heterogeneously, so each row decodes at its
+            # own cache position: a small static per-slot loop (slot count
+            # is tiny) keeps the fused step jit-compatible.
+            b = tokens.shape[0]
+            flat, treedef = jax.tree_util.tree_flatten(caches)
+            row_caches = [
+                jax.tree_util.tree_unflatten(
+                    treedef, [leaf[:, i : i + 1] if leaf.ndim > 1 else leaf for leaf in flat]
+                )
+                for i in range(b)
+            ]
+            outs = []
+            for i in range(b):
+                lg, nc = serve_step(
+                    params, tokens[i : i + 1], row_caches[i], positions[i], cfg
+                )
+                outs.append((lg, nc))
+            logits = jnp.concatenate([o[0] for o in outs], axis=0)
+            merged = jax.tree.map(
+                lambda *rows: jnp.concatenate(rows, axis=1), *[o[1] for o in outs]
+            )
+            return logits, merged
+
+        return jax.jit(step)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                # prefill this slot alone
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                flat, treedef = jax.tree_util.tree_flatten(self.caches)
+                row = jax.tree_util.tree_unflatten(
+                    treedef, [leaf[:, s : s + 1] if leaf.ndim > 1 else leaf for leaf in flat]
+                )
+                logits, row = prefill(self.params, prompt, row, self.cfg)
+                flat_row = jax.tree_util.tree_leaves(row)
+                new_flat = []
+                for leaf, rl in zip(flat, flat_row):
+                    if leaf.ndim > 1:
+                        leaf = jax.lax.dynamic_update_slice_in_dim(leaf, rl, s, axis=1)
+                    new_flat.append(leaf)
+                self.caches = jax.tree_util.tree_unflatten(treedef, new_flat)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(tok)
+                self.slot_pos = self.slot_pos.at[s].set(len(req.prompt))
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._fill_slots()
+        active = [s for s in range(self.n_slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(
+            [
+                [self.slot_req[s].generated[-1]] if self.slot_req[s] else [0]
+                for s in range(self.n_slots)
+            ],
+            jnp.int32,
+        )
+        logits, self.caches = self._decode(self.params, tokens, self.caches, self.slot_pos)
+        toks = jnp.argmax(logits[:, 0, :], axis=-1)
+        for s in active:
+            req = self.slot_req[s]
+            req.generated.append(int(toks[s]))
+            self.slot_pos = self.slot_pos.at[s].add(1)
+            if len(req.generated) >= req.max_new or int(self.slot_pos[s]) >= self.s_max - 1:
+                req.done = True
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self) -> None:
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()

@@ -1,0 +1,7 @@
+"""Training loop, checkpointing, fault tolerance."""
+from repro.train.train_step import (  # noqa: F401
+    TrainState, cross_entropy, init_train_state, loss_fn, make_jit_train_step,
+    train_step,
+)
+from repro.train.trainer import FailureInjector, TrainConfig, Trainer  # noqa: F401
+from repro.train import checkpoint  # noqa: F401

@@ -1,0 +1,82 @@
+"""Loss + train step (pure functions; jit/pjit-ready)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim import compress as gcomp
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: adamw.AdamWState
+    rng: jax.Array
+    residual: Optional[PyTree] = None   # error-feedback for grad compression
+
+
+def init_train_state(key, cfg: ArchConfig, grad_compression: Optional[str] = None) -> TrainState:
+    kp, kr = jax.random.split(key)
+    params = T.init_params(kp, cfg)
+    residual = gcomp.init_residual(params) if grad_compression == "int8" else None
+    return TrainState(params, adamw.init(params), kr, residual)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    logits = T.forward(params, batch, cfg)
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.n_image_tokens :, :]
+    loss = cross_entropy(logits, batch["labels"])
+    acc = (jnp.argmax(logits, -1) == batch["labels"]).mean()
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def train_step(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    opt_cfg: adamw.AdamWConfig,
+    grad_compression: Optional[str] = None,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One optimizer step. Under pjit, XLA inserts the gradient
+    reduce-scatter/all-reduce implied by the shardings; when
+    ``grad_compression`` is set the collective payload is the compressed
+    dtype (encode/decode straddles the reduction)."""
+    rng, rng_next = jax.random.split(state.rng)
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params, batch, cfg
+    )
+    residual = state.residual
+    if grad_compression:
+        grads, residual = gcomp.compress_grads(grads, grad_compression, rng, residual)
+    params, opt, gnorm = adamw.update(opt_cfg, grads, state.opt, state.params)
+    metrics = dict(metrics, grad_norm=gnorm)
+    return TrainState(params, opt, rng_next, residual), metrics
+
+
+def make_jit_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                        grad_compression: Optional[str] = None,
+                        donate: bool = True):
+    f = functools.partial(
+        train_step, cfg=cfg, opt_cfg=opt_cfg, grad_compression=grad_compression
+    )
+    return jax.jit(f, donate_argnums=(0,) if donate else ())
+
+
+# Convenience single-arg forms used by the dry-run (shardings applied there)
+def bare_train_step(state: TrainState, batch, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    return train_step(state, batch, cfg, opt_cfg)

@@ -1,0 +1,179 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond calling the jitted step:
+  * periodic async checkpointing (two-phase commit via train.checkpoint),
+  * crash recovery: on any step failure, restore the last committed
+    checkpoint and replay from there (the data pipeline is seekable, so
+    samples are exactly-once); a ``FailureInjector`` hook lets tests and
+    the chaos example exercise this path deterministically,
+  * straggler mitigation: per-step deadline tracking — steps slower than
+    ``straggler_factor`` x the trailing-median are logged and counted;
+    on a real cluster the same hook triggers preemption/re-slicing
+    (here it feeds the metrics so the policy is testable),
+  * elastic restart: ``Trainer.restore`` accepts the *current* mesh's
+    shardings, so a checkpoint written on one topology resumes on another.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import TokenPipeline
+from repro.optim.adamw import AdamWConfig
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import TrainState, init_train_state, make_jit_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    num_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_last_n: int = 3
+    async_ckpt: bool = True
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    grad_compression: Optional[str] = None   # none | bf16 | int8
+    max_restarts: int = 3
+
+
+class FailureInjector:
+    """Deterministic failure hook for fault-tolerance tests."""
+
+    def __init__(self, fail_at_steps: Optional[List[int]] = None):
+        self.fail_at = set(fail_at_steps or [])
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        opt_cfg: AdamWConfig,
+        train_cfg: TrainConfig,
+        pipeline: TokenPipeline,
+        seed: int = 0,
+        failure_injector: Optional[FailureInjector] = None,
+        batch_transform: Optional[Callable[[Dict], Dict]] = None,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.train_cfg = train_cfg
+        self.pipeline = pipeline
+        self.failure_injector = failure_injector
+        self.batch_transform = batch_transform
+        self.step_fn = make_jit_train_step(
+            cfg, opt_cfg, grad_compression=train_cfg.grad_compression
+        )
+        self.state: TrainState = init_train_state(
+            jax.random.PRNGKey(seed), cfg, train_cfg.grad_compression
+        )
+        self.start_step = 0
+        self.metrics_log: List[Dict[str, float]] = []
+        self.straggler_steps: List[int] = []
+        self.restarts = 0
+        self._pending_ckpt = None
+        if train_cfg.ckpt_dir and ckpt.latest_step(train_cfg.ckpt_dir) is not None:
+            self.restore()
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def save(self, step: int):
+        tc = self.train_cfg
+        if not tc.ckpt_dir:
+            return
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.result()  # don't overlap two saves
+        fut = ckpt.save(
+            tc.ckpt_dir,
+            step,
+            self.state,
+            extra={"arch": self.cfg.name, "data_step": step},
+            async_=tc.async_ckpt,
+        )
+        self._pending_ckpt = fut
+        ckpt.gc_old(tc.ckpt_dir, tc.keep_last_n)
+
+    def restore(self, shardings: Optional[PyTree] = None):
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.result()  # never read a mid-commit checkpoint
+            self._pending_ckpt = None
+        state, step = ckpt.restore(
+            self.train_cfg.ckpt_dir, self.state, shardings=shardings
+        )
+        self.state = state
+        self.start_step = step
+        return step
+
+    # -- main loop ----------------------------------------------------------
+
+    def _one_step(self, step: int) -> Dict[str, float]:
+        batch = self.pipeline.batch(step)
+        if self.batch_transform:
+            batch = self.batch_transform(batch)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        if self.failure_injector:
+            self.failure_injector.maybe_fail(step)
+        self.state, metrics = self.step_fn(self.state, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def run(self) -> List[Dict[str, float]]:
+        tc = self.train_cfg
+        step = self.start_step
+        durations: List[float] = []
+        while step < tc.num_steps:
+            t0 = time.perf_counter()
+            try:
+                metrics = self._one_step(step)
+            except Exception as e:  # node failure path
+                self.restarts += 1
+                if self.restarts > tc.max_restarts or not tc.ckpt_dir:
+                    # drain in-flight checkpoint IO before propagating so
+                    # callers can tear down the directory safely
+                    if self._pending_ckpt is not None:
+                        self._pending_ckpt.result()
+                        self._pending_ckpt = None
+                    raise
+                if ckpt.latest_step(tc.ckpt_dir) is not None:
+                    step = self.restore()
+                else:  # failure before first checkpoint: restart from 0
+                    self.state = init_train_state(
+                        jax.random.PRNGKey(0), self.cfg, tc.grad_compression
+                    )
+                    step = 0
+                print(f"[trainer] recovered from failure ({e}); resuming at step {step}")
+                continue
+            dt = time.perf_counter() - t0
+            durations.append(dt)
+            med = float(np.median(durations[-20:]))
+            if len(durations) > 5 and dt > tc.straggler_factor * med:
+                self.straggler_steps.append(step)
+                print(f"[trainer] straggler step {step}: {dt:.3f}s vs median {med:.3f}s")
+            metrics["step"] = step
+            metrics["sec"] = dt
+            self.metrics_log.append(metrics)
+            if tc.log_every and step % tc.log_every == 0:
+                print(
+                    f"[trainer] step {step:5d} loss {metrics['loss']:.4f} "
+                    f"acc {metrics['accuracy']:.3f} ({dt:.2f}s)"
+                )
+            step += 1
+            if tc.ckpt_dir and step % tc.ckpt_every == 0:
+                self.save(step)
+        if tc.ckpt_dir:
+            self.save(step)
+            if self._pending_ckpt is not None:
+                self._pending_ckpt.result()
+        return self.metrics_log

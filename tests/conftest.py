@@ -1,0 +1,10 @@
+import os
+
+# Tests run single-device (the dry-run, and ONLY the dry-run, forces 512
+# host devices). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,91 @@
+"""Validate the cost model against the paper's reported numbers.
+
+Array level (Figs 9/11): exact — the normalized ratios are the model's
+inputs, so the derived claims must match the text to the percent.
+System level (Figs 12/13): the model *predicts* these from the array
+constants + workload mapping with two calibrated constants; asserted
+within 20% (observed max error ~17%, see EXPERIMENTS.md).
+"""
+import pytest
+
+from repro.core import accelerator as acc
+from repro.core import cost_model as cm
+
+# Paper Section V text, per technology.
+PAPER_ARRAY = {
+    "CiM-I": {
+        "8T-SRAM": dict(lat=88, en=74, read_en=22, read_lat=7, write_lat=4, cell=18),
+        "3T-eDRAM": dict(lat=88, en=78, read_en=24, read_lat=7, write_lat=4, cell=34),
+        "3T-FEMFET": dict(lat=88, en=78, read_en=17, read_lat=19, write_lat=10, cell=34),
+    },
+    "CiM-II": {
+        "8T-SRAM": dict(lat=80, en=61, read_en=74, write_lat=8, cell=6),
+        "3T-eDRAM": dict(lat=78, en=63, read_en=44, write_lat=10, cell=6),
+        "3T-FEMFET": dict(lat=84, en=62, read_en=79, write_lat=3, cell=6),
+    },
+}
+
+
+class TestArrayLevel:
+    @pytest.mark.parametrize("design", ["CiM-I", "CiM-II"])
+    @pytest.mark.parametrize("tech", cm.TECHNOLOGIES)
+    def test_paper_claims(self, tech, design):
+        got = cm.paper_validation_table()[tech][design]
+        want = PAPER_ARRAY[design][tech]
+        assert got["cim_latency_reduction_pct"] == pytest.approx(want["lat"], abs=1.5)
+        assert got["cim_energy_reduction_pct"] == pytest.approx(want["en"], abs=1.5)
+        assert got["read_energy_overhead_pct"] == pytest.approx(want["read_en"], abs=1.5)
+        assert got["write_latency_overhead_pct"] == pytest.approx(want["write_lat"], abs=1.5)
+        assert got["cell_area_overhead_pct"] == pytest.approx(want["cell"], abs=1.5)
+
+    def test_flavor_comparison_section_v3(self):
+        """CiM II vs I: 1.5/1.7/1.7x energy, 1.7/1.8/1.3x latency."""
+        fc = cm.flavor_comparison()
+        assert fc["8T-SRAM"]["energy_II_over_I"] == pytest.approx(1.5, abs=0.1)
+        assert fc["3T-eDRAM"]["energy_II_over_I"] == pytest.approx(1.7, abs=0.1)
+        assert fc["3T-FEMFET"]["energy_II_over_I"] == pytest.approx(1.7, abs=0.1)
+        assert fc["8T-SRAM"]["latency_II_over_I"] == pytest.approx(1.7, abs=0.1)
+        assert fc["3T-eDRAM"]["latency_II_over_I"] == pytest.approx(1.8, abs=0.1)
+        assert fc["3T-FEMFET"]["latency_II_over_I"] == pytest.approx(1.3, abs=0.1)
+
+    def test_macro_area_ranges(self):
+        for tech in cm.TECHNOLOGIES:
+            m1 = cm.ARRAY_METRICS[tech]["CiM-I"].macro_area_vs_nm
+            m2 = cm.ARRAY_METRICS[tech]["CiM-II"].macro_area_vs_nm
+            assert 1.3 <= m1 <= 1.53
+            assert 1.21 <= m2 <= 1.33
+
+
+class TestSystemLevel:
+    @pytest.mark.parametrize("design", ["CiM-I", "CiM-II"])
+    @pytest.mark.parametrize("baseline", ["iso-capacity", "iso-area"])
+    @pytest.mark.parametrize("tech", cm.TECHNOLOGIES)
+    def test_speedup_within_20pct(self, tech, design, baseline):
+        got = acc.average_speedup(tech, design, baseline)
+        want = acc.PAPER_SYSTEM_SPEEDUP[(design, baseline)][tech]
+        assert abs(got - want) / want < 0.20, (got, want)
+
+    @pytest.mark.parametrize("design", ["CiM-I", "CiM-II"])
+    @pytest.mark.parametrize("tech", cm.TECHNOLOGIES)
+    def test_energy_within_20pct(self, tech, design):
+        got = acc.average_energy_reduction(tech, design)
+        want = acc.PAPER_SYSTEM_ENERGY[design][tech]
+        assert abs(got - want) / want < 0.20, (got, want)
+
+    def test_energy_similar_across_baselines(self):
+        """Paper: energy benefits are ~equal for iso-capacity and iso-area
+        since total ops are the same."""
+        a = acc.average_energy_reduction("8T-SRAM", "CiM-I", "iso-capacity")
+        b = acc.average_energy_reduction("8T-SRAM", "CiM-I", "iso-area")
+        assert abs(a - b) / a < 0.02
+
+    def test_benchmark_suite_complete(self):
+        assert set(acc.get_benchmarks()) == {"AlexNet", "ResNet34", "Inception", "LSTM", "GRU"}
+
+    def test_mac_counts_sane(self):
+        b = acc.get_benchmarks()
+        # published MAC counts (approximate): AlexNet ~0.7G, ResNet34 ~3.6G
+        alex = sum(l.macs for l in b["AlexNet"])
+        rn = sum(l.macs for l in b["ResNet34"])
+        assert 0.5e9 < alex < 1.2e9
+        assert 2.5e9 < rn < 4.5e9

@@ -1,0 +1,128 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ternary import pack_ternary
+from repro.kernels import ops, ref
+from repro.kernels.packed_mac import packed_cim_matmul
+from repro.kernels.ternary_mac import ternary_cim_matmul, ternary_exact_matmul
+
+
+def rand_ternary(key, shape, dtype=jnp.bfloat16, p_zero=0.3):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(dtype)
+
+
+SHAPES = [
+    (128, 128, 128),
+    (256, 384, 128),
+    (128, 256, 256),
+    (384, 128, 384),
+]
+DTYPES = [jnp.bfloat16, jnp.float32]
+
+
+class TestCiMKernel:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_oracle(self, m, k, n, dtype):
+        kx, kw = jax.random.split(jax.random.PRNGKey(m * 7 + k + n))
+        x = rand_ternary(kx, (m, k), dtype)
+        w = rand_ternary(kw, (k, n), dtype)
+        out = ternary_cim_matmul(x, w, interpret=True)
+        expect = ref.ref_cim_matmul(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=0)
+
+    @pytest.mark.parametrize("bm,bk,bn", [(128, 128, 128), (256, 128, 128), (128, 384, 128)])
+    def test_block_shape_sweep(self, bm, bk, bn):
+        kx, kw = jax.random.split(jax.random.PRNGKey(42))
+        x = rand_ternary(kx, (256, 384), jnp.bfloat16)
+        w = rand_ternary(kw, (384, 256), jnp.bfloat16)
+        out = ternary_cim_matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.ref_cim_matmul(x, w)), atol=0
+        )
+
+    def test_dense_inputs_exercise_clamp(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(3))
+        x = rand_ternary(kx, (128, 128), p_zero=0.0)
+        w = rand_ternary(kw, (128, 128), p_zero=0.0)
+        out = np.asarray(ternary_cim_matmul(x, w, interpret=True))
+        exact = np.asarray(x.astype(jnp.float32) @ w.astype(jnp.float32))
+        assert (out != exact).any()  # clamp must bind somewhere
+        np.testing.assert_allclose(out, np.asarray(ref.ref_cim_matmul(x, w)), atol=0)
+
+
+class TestExactKernel:
+    @pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 128)])
+    def test_matches_oracle(self, m, k, n):
+        kx, kw = jax.random.split(jax.random.PRNGKey(m + k + n))
+        x = rand_ternary(kx, (m, k))
+        w = rand_ternary(kw, (k, n))
+        out = ternary_exact_matmul(x, w, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.ref_exact_matmul(x, w)), atol=0
+        )
+
+
+class TestPackedKernel:
+    @pytest.mark.parametrize("m,k,n", [(128, 256, 128), (128, 512, 256)])
+    @pytest.mark.parametrize("cim", [True, False])
+    def test_matches_oracle(self, m, k, n, cim):
+        kx, kw = jax.random.split(jax.random.PRNGKey(m + k + n + cim))
+        x = rand_ternary(kx, (m, k), jnp.float32)
+        t = rand_ternary(kw, (k, n), jnp.int8)
+        wp, wn = pack_ternary(t, axis=0)
+        out = packed_cim_matmul(x, wp, wn, cim=cim, interpret=True)
+        expect = ref.ref_packed_matmul(x, wp, wn, cim=cim)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=0)
+
+    def test_packed_weights_8x_smaller(self):
+        t = rand_ternary(jax.random.PRNGKey(0), (512, 128), jnp.int8)
+        wp, wn = pack_ternary(t, axis=0)
+        assert wp.nbytes + wn.nbytes == t.nbytes // 4  # int8 -> 2 bits
+
+
+class TestOpsWrapper:
+    def test_ragged_and_batched(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(1))
+        x = rand_ternary(kx, (2, 3, 100), jnp.float32)
+        w = rand_ternary(kw, (100, 37), jnp.float32)
+        out = ops.cim_matmul(x, w)
+        x2 = jnp.pad(x.reshape(6, 100), ((0, 0), (0, 12)))
+        w2 = jnp.pad(w, ((0, 12), (0, 0)))
+        expect = ref.ref_cim_matmul(x2, w2).reshape(2, 3, 37)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=0)
+
+    def test_pallas_and_jnp_paths_agree(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(2))
+        x = rand_ternary(kx, (64, 200), jnp.float32)
+        w = rand_ternary(kw, (200, 50), jnp.float32)
+        a = ops.cim_matmul(x, w, 16, 8, "jnp")
+        b = ops.cim_matmul(x, w, 16, 8, "pallas")  # interpret on CPU
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+    def test_ste_gradients(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(3))
+        x = rand_ternary(kx, (8, 64), jnp.float32)
+        w = rand_ternary(kw, (64, 16), jnp.float32)
+        gx, gw = jax.grad(lambda x, w: ops.cim_matmul(x, w).sum(), argnums=(0, 1))(x, w)
+        # STE backward == exact-matmul backward
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(jnp.ones((8, 16)) @ w.T), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ jnp.ones((8, 16))), rtol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([128, 256]),
+       st.sampled_from([128, 256, 384]), st.sampled_from([128, 256]))
+def test_kernel_oracle_property(seed, m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand_ternary(kx, (m, k))
+    w = rand_ternary(kw, (k, n))
+    out = ternary_cim_matmul(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.ref_cim_matmul(x, w)), atol=0)

@@ -1,0 +1,55 @@
+"""Offline ternarization / packing surgery + pre_quantized serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import unpack_ternary
+from repro.models import transformer as T
+from repro.models.layers import QuantConfig
+from repro.models.registry import get_config
+from repro.quant.prepare import pack_params, ternarize_params
+
+
+def test_ternarize_params_only_touches_quantizable():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tp = ternarize_params(params)
+    # embeddings / norms untouched
+    np.testing.assert_array_equal(np.asarray(tp["embed"]), np.asarray(params["embed"]))
+    np.testing.assert_array_equal(
+        np.asarray(tp["final_norm"]), np.asarray(params["final_norm"]))
+    # attention weights became {-s, 0, s} per channel
+    wq = np.asarray(tp["blocks"]["attn"]["wq"][0], np.float32)
+    per_col_vals = [np.unique(np.abs(wq[:, j])) for j in range(4)]
+    for vals in per_col_vals:
+        nz = vals[vals > 0]
+        assert len(nz) <= 1  # single magnitude per output channel
+
+
+def test_prequantized_forward_close_to_qat_forward():
+    cfg = get_config("smollm-135m", smoke=True)  # cim mode
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    ref = T.forward(params, {"tokens": toks}, cfg)
+    tp = ternarize_params(params)
+    cfg_pq = cfg.replace(quant=QuantConfig(mode="cim", pre_quantized=True))
+    out = T.forward(tp, {"tokens": toks}, cfg_pq)
+    # pre-quantized path must reproduce the QAT forward (same ternary
+    # weights, scales folded) up to bf16 noise
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=8e-2, atol=8e-2,
+    )
+
+
+def test_pack_params_roundtrip():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    folded, packed = pack_params(params)
+    assert packed, "no weights packed"
+    for path, (p1, p2, scale) in packed.items():
+        k_axis = p1.ndim - 2
+        t = unpack_ternary(p1, p2, axis=k_axis).astype(jnp.float32)
+        assert set(np.unique(np.asarray(t))) <= {-1.0, 0.0, 1.0}
+        # packed planes are 1/8 the K extent
+        assert p1.shape[k_axis] * 8 == t.shape[k_axis]

@@ -1,0 +1,134 @@
+"""The paper's functional claims: truth table, MAC semantics, ADC clamp,
+sensing-error channel — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import site_cim as sc
+
+
+def rand_ternary(key, shape, p_zero=0.34):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(jnp.int32)
+
+
+class TestScalarProduct:
+    def test_truth_table(self):
+        """Fig. 3(d): O = I * W for all nine ternary combinations."""
+        for i in (-1, 0, 1):
+            for w in (-1, 0, 1):
+                o = sc.scalar_product(jnp.asarray(i), jnp.asarray(w))
+                assert int(o) == i * w, (i, w)
+
+
+class TestCiMMatmul:
+    def test_no_clip_equals_exact(self):
+        key = jax.random.PRNGKey(0)
+        x = rand_ternary(key, (8, 128))
+        w = rand_ternary(jax.random.PRNGKey(1), (128, 32))
+        cfg = sc.SiTeCiMConfig(adc_max=16)  # a,b <= 16 so clamp never binds
+        np.testing.assert_array_equal(
+            np.asarray(sc.site_cim_matmul(x, w, cfg)),
+            np.asarray(sc.nm_ternary_matmul(x, w)),
+        )
+
+    def test_three_formulations_agree(self):
+        key = jax.random.PRNGKey(2)
+        x = rand_ternary(key, (4, 96), p_zero=0.1)  # low sparsity -> clipping
+        w = rand_ternary(jax.random.PRNGKey(3), (96, 16), p_zero=0.1)
+        a = sc.site_cim_matmul(x, w)
+        b = sc.site_cim_matmul_corrected(x, w)
+        c = sc.site_cim_matmul_bitplane(x, w)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_adc_clamp_binds(self):
+        """All-ones block: a = 16 > 8, so output must clamp to 8."""
+        x = jnp.ones((1, 16), jnp.int32)
+        w = jnp.ones((16, 1), jnp.int32)
+        out = sc.site_cim_matmul(x, w)
+        assert int(out[0, 0]) == sc.ADC_MAX  # not 16
+
+    def test_clamp_per_block_not_global(self):
+        # two blocks, each saturating at 8 -> total 16
+        x = jnp.ones((1, 32), jnp.int32)
+        w = jnp.ones((32, 1), jnp.int32)
+        assert int(sc.site_cim_matmul(x, w)[0, 0]) == 2 * sc.ADC_MAX
+
+    def test_negative_clamp(self):
+        x = jnp.ones((1, 16), jnp.int32)
+        w = -jnp.ones((16, 1), jnp.int32)
+        assert int(sc.site_cim_matmul(x, w)[0, 0]) == -sc.ADC_MAX
+
+    def test_padding_for_ragged_k(self):
+        key = jax.random.PRNGKey(4)
+        x = rand_ternary(key, (3, 45))
+        w = rand_ternary(jax.random.PRNGKey(5), (45, 7))
+        out = sc.site_cim_matmul(x, w, sc.SiTeCiMConfig(adc_max=16))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x @ w))
+
+    def test_flavors_same_math(self):
+        """CiM I and II differ in circuits/cost, not results (Section IV)."""
+        key = jax.random.PRNGKey(6)
+        x = rand_ternary(key, (5, 64))
+        w = rand_ternary(jax.random.PRNGKey(7), (64, 9))
+        np.testing.assert_array_equal(
+            np.asarray(sc.site_cim_matmul(x, w, sc.PAPER_CIM_I)),
+            np.asarray(sc.site_cim_matmul(x, w, sc.PAPER_CIM_II)),
+        )
+
+
+class TestSensingError:
+    def test_error_rate_matches_config(self):
+        key = jax.random.PRNGKey(8)
+        x = rand_ternary(key, (64, 256))
+        w = rand_ternary(jax.random.PRNGKey(9), (256, 64))
+        cfg = sc.SiTeCiMConfig(error_prob=sc.SENSE_ERROR_PROB)
+        clean = sc.site_cim_matmul(x, w)
+        noisy = sc.site_cim_matmul(x, w, cfg, key=jax.random.PRNGKey(10))
+        diff = np.asarray(clean) != np.asarray(noisy)
+        # each output sums 16 block partials; P(any flip) ~ 16 * 3.1e-3
+        rate = diff.mean()
+        assert 0.2 * 16 * 3.1e-3 < rate < 5 * 16 * 3.1e-3
+        # perturbations are +-1 ADC levels
+        delta = np.abs(np.asarray(clean) - np.asarray(noisy))
+        assert delta.max() <= 4  # a few coincident flips at most
+
+    def test_error_requires_key(self):
+        cfg = sc.SiTeCiMConfig(error_prob=0.1)
+        with pytest.raises(ValueError):
+            sc.site_cim_matmul(jnp.ones((1, 16)), jnp.ones((16, 1)), cfg)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 8),
+       st.integers(1, 6))
+def test_cim_matmul_property(seed, m, n, kb):
+    """Property: CiM output == blockwise-clamped exact computation, and
+    |cim - exact| <= sum of possible clamp losses."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand_ternary(k1, (m, kb * 16), p_zero=0.2)
+    w = rand_ternary(k2, (kb * 16, n), p_zero=0.2)
+    cim = np.asarray(sc.site_cim_matmul(x, w))
+    corr = np.asarray(sc.site_cim_matmul_corrected(x, w))
+    exact = np.asarray(x @ w)
+    np.testing.assert_array_equal(cim, corr)
+    assert np.all(np.abs(cim) <= kb * sc.ADC_MAX)
+    # clamping only shrinks magnitudes of block partials
+    assert np.all(np.abs(cim - exact) <= kb * 8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_sign_symmetry_property(seed):
+    """I -> -I flips the sign of every output (cross-coupling semantics)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand_ternary(k1, (4, 64))
+    w = rand_ternary(k2, (64, 8))
+    a = np.asarray(sc.site_cim_matmul(x, w))
+    b = np.asarray(sc.site_cim_matmul(-x, w))
+    np.testing.assert_array_equal(a, -b)

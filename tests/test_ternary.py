@@ -1,0 +1,116 @@
+"""Unit + property tests for ternary quantization and encodings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ternary as tern
+
+
+def rand_ternary(key, shape):
+    return jax.random.randint(key, shape, -1, 2).astype(jnp.int8)
+
+
+class TestTernarize:
+    def test_outputs_are_ternary(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        t, scale = tern.ternarize(x)
+        assert set(np.unique(np.asarray(t))) <= {-1.0, 0.0, 1.0}
+        assert float(scale) > 0
+
+    def test_scale_is_conditional_mean(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1024,))
+        t, scale = tern.ternarize(x)
+        mask = np.asarray(t) != 0
+        expected = np.abs(np.asarray(x))[mask].mean()
+        np.testing.assert_allclose(float(scale), expected, rtol=1e-5)
+
+    def test_per_channel(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (128, 8)) * jnp.arange(1, 9) ** 2
+        t, scale = tern.ternarize(x, axis=(0,))
+        assert scale.shape == (1, 8)
+        s = np.asarray(scale)[0]
+        assert s[-1] > 4 * s[0]  # scales track per-channel magnitude
+
+    def test_zero_input(self):
+        t, scale = tern.ternarize(jnp.zeros((16,)))
+        assert np.all(np.asarray(t) == 0)
+
+
+class TestSTE:
+    def test_forward_ternary_times_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (256,))
+        y = tern.ste_ternarize(x)
+        t, s = tern.ternarize(x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(t * s), rtol=1e-6)
+
+    def test_gradient_clipped_identity(self):
+        x = jnp.array([-2.0, -0.5, 0.1, 0.5, 2.0])
+        g = jax.grad(lambda v: tern.ste_ternarize(v).sum())(x)
+        np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+    def test_unit_variant_unscaled(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (64,))
+        y = tern.ste_unit_ternarize(x)
+        assert set(np.unique(np.asarray(y))) <= {-1.0, 0.0, 1.0}
+
+
+class TestBitplanes:
+    def test_encoding_table(self):
+        # Fig. 3(a): W=+1 -> (1,0); W=-1 -> (0,1); W=0 -> (0,0)
+        t = jnp.array([1, -1, 0], jnp.int8)
+        m1, m2 = tern.to_bitplanes(t)
+        np.testing.assert_array_equal(np.asarray(m1), [1, 0, 0])
+        np.testing.assert_array_equal(np.asarray(m2), [0, 1, 0])
+        np.testing.assert_array_equal(np.asarray(tern.from_bitplanes(m1, m2)), np.asarray(t))
+        assert bool(tern.validate_bitplanes(m1, m2))
+
+    def test_illegal_state_detected(self):
+        assert not bool(tern.validate_bitplanes(jnp.ones((2,), jnp.uint8), jnp.ones((2,), jnp.uint8)))
+
+    @pytest.mark.parametrize("shape,axis", [((64,), 0), ((48, 8), 0), ((8, 16, 4), 1)])
+    def test_pack_roundtrip(self, shape, axis):
+        t = rand_ternary(jax.random.PRNGKey(5), shape)
+        p1, p2 = tern.pack_ternary(t, axis=axis)
+        assert p1.shape[axis] == shape[axis] // 8
+        out = tern.unpack_ternary(p1, p2, axis=axis)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(t))
+
+    def test_pack_requires_multiple_of_8(self):
+        with pytest.raises(ValueError):
+            tern.pack_ternary(jnp.zeros((7,), jnp.int8))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 6))
+def test_pack_roundtrip_property(seed, rows8, cols):
+    t = rand_ternary(jax.random.PRNGKey(seed), (rows8 * 8, cols))
+    p1, p2 = tern.pack_ternary(t, axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(tern.unpack_ternary(p1, p2, axis=0)), np.asarray(t)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ternarize_idempotent_property(seed):
+    """ternarize(t * s) == (t, ~s) for already-ternary inputs."""
+    t = rand_ternary(jax.random.PRNGKey(seed), (128,)).astype(jnp.float32)
+    t2, s2 = tern.ternarize(t)
+    np.testing.assert_array_equal(np.asarray(t2), np.asarray(t))
+
+
+def test_block_overflow_rate_sparse_inputs():
+    """Paper: sparsity keeps ADC overflow rare. Dense random +-1 overflows
+    much more often than 70%-sparse inputs."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dense_x = jax.random.choice(k1, jnp.array([-1, 1]), (64, 256)).astype(jnp.float32)
+    dense_w = jax.random.choice(k2, jnp.array([-1, 1]), (256, 64)).astype(jnp.float32)
+    sparse_x = dense_x * jax.random.bernoulli(k3, 0.3, dense_x.shape)
+    sparse_w = dense_w * jax.random.bernoulli(k4, 0.3, dense_w.shape)
+    dense_rate = float(tern.block_overflow_rate(dense_x, dense_w))
+    sparse_rate = float(tern.block_overflow_rate(sparse_x, sparse_w))
+    assert sparse_rate < dense_rate
+    assert sparse_rate < 0.01
