@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import site_cim as sc
+from repro import api
 from repro.core.ternary import ternarize
 from benchmarks.bench_accuracy import _train_ternary_mlp
 
@@ -23,8 +23,9 @@ def mac_distortion(block: int, adc_max: int, key, p_zero=0.55, n=64, k=1024, m=6
          * jax.random.bernoulli(k3, 1 - p_zero, (n, k))).astype(jnp.int32)
     w = (jax.random.choice(k2, jnp.array([-1, 1]), (k, m))
          * jax.random.bernoulli(k4, 1 - p_zero, (k, m))).astype(jnp.int32)
-    cfg = sc.SiTeCiMConfig(block=block, adc_max=adc_max)
-    out = sc.site_cim_matmul(x, w, cfg).astype(jnp.float32)
+    spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                           block=block, adc_max=adc_max)
+    out = api.execute(spec, x, w).astype(jnp.float32)
     exact = (x @ w).astype(jnp.float32)
     rel = jnp.linalg.norm(out - exact) / jnp.maximum(jnp.linalg.norm(exact), 1e-9)
     return float(rel)
@@ -36,8 +37,9 @@ def run(csv: bool = True):
     def acc(block: int, adc_max: int) -> float:
         xt, sx = ternarize(xs)
         w1t, s1 = ternarize(w1, axis=(0,))
-        cfg = sc.SiTeCiMConfig(block=block, adc_max=adc_max)
-        h = sc.site_cim_matmul(xt.astype(jnp.int32), w1t.astype(jnp.int32), cfg)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               block=block, adc_max=adc_max)
+        h = api.execute(spec, xt.astype(jnp.int32), w1t.astype(jnp.int32))
         h = jax.nn.relu(h.astype(jnp.float32) * sx * s1)
         return float((jnp.argmax(h @ w2, -1) == ys).mean())
 

@@ -7,7 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import site_cim as sc
+from repro import api
+from repro.core.site_cim import SENSE_ERROR_PROB
 from repro.core.ternary import ternarize
 
 
@@ -47,9 +48,10 @@ def run(csv: bool = True):
         if mode == "exact":
             h = xt @ w1t
         else:
-            cfg = sc.SiTeCiMConfig(error_prob=error_prob)
-            h = sc.site_cim_matmul(
-                xt.astype(jnp.int32), w1t.astype(jnp.int32), cfg, key=key
+            spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                                   error_prob=error_prob)
+            h = api.execute(
+                spec, xt.astype(jnp.int32), w1t.astype(jnp.int32), key=key
             ).astype(jnp.float32)
         h = jax.nn.relu(h * sx * s1)
         lg = h @ w2
@@ -58,7 +60,7 @@ def run(csv: bool = True):
     rows = [
         ("exact_ternary_NM", acc("exact"), "baseline"),
         ("site_cim_clean", acc("cim"), "ADC clamp only"),
-        ("site_cim_err_3.1e-3", acc("cim", sc.SENSE_ERROR_PROB, jax.random.PRNGKey(7)),
+        ("site_cim_err_3.1e-3", acc("cim", SENSE_ERROR_PROB, jax.random.PRNGKey(7)),
          "paper's measured error prob"),
         ("site_cim_err_1e-2", acc("cim", 1e-2, jax.random.PRNGKey(8)), "3x the paper rate"),
         ("site_cim_err_1e-1", acc("cim", 1e-1, jax.random.PRNGKey(9)), "stress"),

@@ -1,20 +1,38 @@
 """Paper Figs 9 & 11: array-level CiM/read/write latency+energy vs NM,
 per technology and flavor — derived from the calibrated cost model and
-checked against the paper's reported percentages."""
+checked against the paper's reported percentages.
+
+The designs are named through the execution API: a ``CiMExecSpec`` maps
+onto the paper's array designs via ``repro.api.spec_design`` (exact MAC
+semantics -> NM baseline; clamped formulations -> SiTe CiM, flavor
+choosing I vs II), so the cost rows correspond one-to-one with specs a
+model can actually serve under.
+"""
 from __future__ import annotations
 
+from repro import api
 from repro.core import cost_model as cm
+
+# the execution specs behind each of the paper's array designs
+DESIGN_SPECS = {
+    "CiM-I": api.CiMExecSpec(formulation="blocked", flavor="I"),
+    "CiM-II": api.CiMExecSpec(formulation="blocked", flavor="II"),
+}
 
 
 def rows():
     out = []
     for tech in cm.TECHNOLOGIES:
-        for design in ("CiM-I", "CiM-II"):
+        for design, spec in DESIGN_SPECS.items():
+            assert api.spec_design(spec) == design
             t = cm.paper_validation_table()[tech][design]
+            cost = api.spec_cost_summary(spec, tech)
             out.append({
                 "figure": "Fig9" if design == "CiM-I" else "Fig11",
                 "tech": tech,
                 "design": design,
+                "spec": spec.name,
+                "mac_pass_ns": round(cost["mac_pass_ns"], 2),
                 **{k: round(v, 2) for k, v in t.items()},
             })
     return out

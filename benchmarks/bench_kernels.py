@@ -1,10 +1,14 @@
 """Kernel micro-benchmarks: wall time of the CiM formulations on this
 host (CPU) + the TPU-target roofline characteristics of each kernel.
 
-Wall-clock here characterizes the *functional* implementations (the jnp
-forms XLA:CPU executes); the Pallas kernels are timed in interpret mode
-only for sanity (they target TPU). The derived column reports the
-analytic bytes/flops profile used by EXPERIMENTS.md §Perf.
+Every formulation is invoked through the declarative execution API
+(``repro.api.execute`` with a ``CiMExecSpec``) — the same dispatch path
+layer code uses — so the timings cover the shim (padding, dtype policy,
+STE wrapper), not just the raw einsums. Wall-clock here characterizes
+the *functional* implementations (the jnp forms XLA:CPU executes); the
+Pallas kernels are timed in interpret mode only for sanity (they target
+TPU). The derived column reports the analytic bytes/flops profile used
+by EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
@@ -13,8 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import site_cim as sc
-from repro.kernels import ref
+from repro import api
 
 
 def _time(fn, *args, reps=5):
@@ -33,23 +36,34 @@ def rand_ternary(key, shape, p_zero=0.3):
     return (sign * keep).astype(jnp.float32)
 
 
+# (row name, spec, derived-profile note)
+SPECS = [
+    ("cim_blocked_jnp",
+     api.CiMExecSpec(formulation="blocked", backend="jnp"), "flops=2x exact"),
+    ("cim_corrected_jnp",
+     api.CiMExecSpec(formulation="corrected", backend="jnp"), "flops=3x exact"),
+    ("nm_exact_jnp",
+     api.CiMExecSpec(formulation="exact", backend="jnp"), "flops=1x exact"),
+    ("cim_fused_jnp",
+     api.CiMExecSpec(formulation="fused", backend="jnp"), "kernel HLO structure"),
+    ("cim_packed_jnp",
+     api.CiMExecSpec(formulation="blocked", backend="jnp", packing="bitplane_u8"),
+     "2-bit weight storage"),
+    ("cim_bitplane_jnp",
+     api.CiMExecSpec(formulation="bitplane", backend="jnp"), "structural oracle"),
+]
+
+
 def run(csv: bool = True):
     m, k, n = 256, 1024, 512
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = rand_ternary(kx, (m, k))
     w = rand_ternary(kw, (k, n))
-    flops_exact = 2 * m * k * n
     rows = []
-
-    cim = jax.jit(lambda x, w: sc.site_cim_matmul(x, w))
-    rows.append(("cim_blocked_jnp", _time(cim, x, w), f"flops={2*flops_exact}"))
-    corr = jax.jit(lambda x, w: sc.site_cim_matmul_corrected(x, w))
-    rows.append(("cim_corrected_jnp", _time(corr, x, w), f"flops={3*flops_exact}"))
-    nm = jax.jit(lambda x, w: sc.nm_ternary_matmul(x, w))
-    rows.append(("nm_exact_jnp", _time(nm, x, w), f"flops={flops_exact}"))
-    bit = jax.jit(lambda x, w: sc.site_cim_matmul_bitplane(
-        x.astype(jnp.int32), w.astype(jnp.int32)))
-    rows.append(("cim_bitplane_jnp", _time(bit, x, w, reps=2), "structural oracle"))
+    for name, spec, note in SPECS:
+        fn = jax.jit(lambda x, w, s=spec: api.execute(s, x, w))
+        reps = 2 if spec.formulation == "bitplane" else 5
+        rows.append((name, _time(fn, x, w, reps=reps), note))
 
     if csv:
         print("name,us_per_call,derived")

@@ -9,8 +9,12 @@ Run: PYTHONPATH=src python examples/cim_array_demo.py
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import site_cim as sc
 from repro.core.ternary import to_bitplanes, block_overflow_rate
+
+# the demo's array semantics, as a declarative execution spec
+CIM = api.CiMExecSpec(formulation="blocked", backend="jnp")
 
 
 def main():
@@ -32,7 +36,7 @@ def main():
     a = int(jnp.sum((x * w) == 1))
     b = int(jnp.sum((x * w) == -1))
     exact = int(x @ w)
-    cim = int(sc.site_cim_matmul(x[None], w[:, None])[0, 0])
+    cim = int(api.execute(CIM, x[None], w[:, None])[0, 0])
     print(f"  a={a} (+1 events), b={b} (-1 events)")
     print(f"  exact dot = a-b = {exact}")
     print(f"  CiM output = min(a,8)-min(b,8) = {cim}   <-- ADC clamp at 8")
@@ -52,9 +56,10 @@ def main():
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
     xs = jax.random.randint(k1, (32, 256), -1, 2)
     ws = jax.random.randint(k2, (256, 32), -1, 2)
-    clean = sc.site_cim_matmul(xs, ws)
-    cfg = sc.SiTeCiMConfig(error_prob=sc.SENSE_ERROR_PROB)
-    noisy = sc.site_cim_matmul(xs, ws, cfg, key=k3)
+    clean = api.execute(CIM, xs, ws)
+    noisy_spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                                 error_prob=sc.SENSE_ERROR_PROB)
+    noisy = api.execute(noisy_spec, xs, ws, key=k3)
     n_diff = int(jnp.sum(clean != noisy))
     print(f"  outputs perturbed: {n_diff}/{clean.size} "
           f"(expected ~= 16 blocks x 3.1e-3 x {clean.size} = "

@@ -1,20 +1,21 @@
 """Quickstart: the paper's technique in five minutes.
 
 1. Build a ternary weight/input pair.
-2. Compute the signed-ternary dot product three ways: exact near-memory,
-   SiTe CiM array semantics (16-row ADC clamp), and the Pallas kernel
-   (interpret mode on CPU).
-3. Show the array- and system-level cost model (the paper's Figs 9-13).
+2. Compute the signed-ternary dot product through the declarative
+   execution API (``repro.api``): exact near-memory, SiTe CiM array
+   semantics (16-row ADC clamp), and the Pallas kernel backend
+   (interpret mode on CPU) — one ``execute`` call each, the spec picks
+   the kernel.
+3. Show the array- and system-level cost model (the paper's Figs 9-13),
+   mapped from the same specs.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import site_cim as sc
+from repro import api
 from repro.core.ternary import pack_ternary, ternarize
-from repro.kernels.ops import cim_matmul
-from repro.core import cost_model as cm
 from repro.core import accelerator as acc
 
 
@@ -29,29 +30,40 @@ def main():
     print(f"input sparsity:  {float((x_t == 0).mean()):.2f}")
     print(f"weight sparsity: {float((w_t == 0).mean()):.2f}")
 
+    xi = x_t.astype(jnp.int32)
+    wi = w_t.astype(jnp.int32)
     # 1) exact near-memory ternary matmul (the paper's NM baseline)
-    exact = sc.nm_ternary_matmul(x_t.astype(jnp.int32), w_t.astype(jnp.int32))
+    exact = api.execute(api.CiMExecSpec(formulation="exact", backend="jnp"), xi, wi)
     # 2) SiTe CiM: 16 rows per cycle, 3-bit ADC with clamp at 8
-    cim = sc.site_cim_matmul(x_t.astype(jnp.int32), w_t.astype(jnp.int32))
-    # 3) the Pallas TPU kernel (interpret mode on CPU; pads to MXU tiles)
-    kern = cim_matmul(
-        x_t.astype(jnp.float32), w_t.astype(jnp.float32), 16, 8, "pallas"
+    cim_spec = api.CiMExecSpec(formulation="blocked", backend="jnp")
+    cim = api.execute(cim_spec, xi, wi)
+    # 3) the Pallas TPU kernel backend (interpret mode on CPU; the shim
+    #    pads to MXU tiles) — same spec, different backend
+    kern = api.execute(
+        api.CiMExecSpec(formulation="blocked", backend="pallas"),
+        x_t.astype(jnp.float32), w_t.astype(jnp.float32),
     )
     agree = bool(jnp.all(cim == kern.astype(jnp.int32)))
     clipped = int(jnp.sum(cim != exact))
     print(f"kernel == functional model: {agree}")
     print(f"outputs where the ADC clamp engaged: {clipped}/{cim.size}")
 
-    # 2-bit differential storage (the memory-macro layout)
+    # 2-bit differential storage (the memory-macro layout); the packed
+    # kernel backend consumes exactly this via packing="bitplane_u8"
     wp, wn = pack_ternary(w_t.astype(jnp.int8), axis=0)
     print(f"weight bytes: fp32 {w_f.nbytes}, packed 2-bit {wp.nbytes + wn.nbytes}")
 
-    # cost model: the paper's headline numbers
-    t = cm.paper_validation_table()["8T-SRAM"]["CiM-I"]
-    print(f"\n8T-SRAM SiTe CiM I vs near-memory (paper Fig 9):")
+    # cost model: the spec maps onto the paper's array designs
+    design = api.spec_design(cim_spec)
+    cost = api.spec_cost_summary(cim_spec, "8T-SRAM")
+    print(f"\nspec {cim_spec.name} -> array design {design}")
+    import repro.core.cost_model as cm
+    t = cm.paper_validation_table()["8T-SRAM"][design]
+    print(f"8T-SRAM SiTe CiM I vs near-memory (paper Fig 9):")
     print(f"  CiM latency reduction : {t['cim_latency_reduction_pct']:.0f}%  (paper: 88%)")
     print(f"  CiM energy reduction  : {t['cim_energy_reduction_pct']:.0f}%  (paper: 74%)")
-    s = acc.average_speedup("8T-SRAM", "CiM-I", "iso-capacity")
+    print(f"  MAC pass              : {cost['mac_pass_ns']:.0f} ns")
+    s = acc.average_speedup("8T-SRAM", design, "iso-capacity")
     print(f"  system speedup (5 DNNs, iso-capacity): {s:.2f}x (paper: 6.74x)")
 
 

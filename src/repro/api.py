@@ -1,0 +1,26 @@
+"""``repro.api`` — the public execution API for signed-ternary CiM MACs.
+
+    from repro import api
+
+    spec = api.CiMExecSpec(formulation="blocked", backend="auto")
+    out = api.execute(spec, x_t, w_t)
+
+See repro.core.execution for the full documentation and DESIGN.md for
+the architecture.
+"""
+from repro.core.execution import (  # noqa: F401
+    BACKENDS,
+    FLAVORS,
+    FORMULATIONS,
+    PACKINGS,
+    BackendEntry,
+    CiMExecSpec,
+    execute,
+    execute_packed,
+    get_backend,
+    register_backend,
+    registered_specs,
+    spec_array_cost,
+    spec_cost_summary,
+    spec_design,
+)

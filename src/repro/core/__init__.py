@@ -1,11 +1,19 @@
 """Core contribution of the paper: signed-ternary CiM in JAX.
 
 Public surface:
+  * declarative execution API (``repro.core.execution`` / ``repro.api``)
   * ternary quantization / encodings (``repro.core.ternary``)
-  * SiTe CiM array functional model (``repro.core.site_cim``)
+  * SiTe CiM array functional model (``repro.core.site_cim`` — aliases
+    forwarding into the execution registry)
   * array-level cost model, Figs 9/11 (``repro.core.cost_model``)
   * TiM-DNN system model, Figs 12/13 (``repro.core.accelerator``)
 """
+from repro.core.execution import (  # noqa: F401
+    CiMExecSpec,
+    execute,
+    register_backend,
+    registered_specs,
+)
 from repro.core.site_cim import (  # noqa: F401
     ADC_MAX,
     N_ACTIVE,

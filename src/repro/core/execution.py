@@ -1,0 +1,573 @@
+"""Declarative CiM execution API — the single dispatch point for every
+signed-ternary MAC in the repo (re-exported as ``repro.api``).
+
+Motivation (DESIGN.md §3): the SiTe CiM dot product used to be reachable
+through seven parallel entry points (``site_cim_matmul``,
+``site_cim_matmul_corrected``, ``site_cim_matmul_bitplane``,
+``nm_ternary_matmul``, ``kernels.ops.cim_matmul``,
+``exact_ternary_matmul``, ``packed_cim_matmul``), each with its own
+padding/dtype/VJP/backend-selection logic. TiM-DNN and STeP-CiM show the
+same functional MAC semantics recur across array technologies — so the
+dispatch is now data, not code:
+
+    spec = CiMExecSpec(formulation="blocked", backend="auto")
+    out  = execute(spec, x_t, w_t)
+
+``CiMExecSpec`` names *what* to compute (formulation, ADC clamp, flavor,
+sensing-error channel) and *how* (backend kernel, weight packing). A
+registry maps resolved ``(formulation, backend, packing)`` keys to kernel
+functions; new formulations/kernels plug in with ``register_backend``
+without touching any call site. One shared shim owns:
+
+  * leading-batch-dim flattening (kernels see (M, K) x (K, N)),
+  * contraction-dim padding to the block granularity (zero rows are
+    inert under the a/b event-count semantics),
+  * the straight-through-estimator ``custom_vjp`` (backward = exact
+    matmul; the ADC clamp is piecewise linear with slope 1 almost
+    everywhere — DESIGN.md §4),
+  * the stochastic sensing-error channel (±1 ADC-level flips per block
+    partial, paper rate 3.1e-3),
+  * output dtype restoration (results return in the input dtype).
+
+Built-in formulations:
+
+  exact     — near-memory baseline, no clamp (paper's NM design).
+  blocked   — faithful per-16-row a/b event counts + 3-bit ADC clamp.
+  corrected — clip-as-correction: exact full-depth dot + rare clamp
+              correction term (numerically == blocked, DESIGN.md §2).
+  bitplane  — event counting over the (M1, M2) bitplanes; mirrors the
+              circuit directly and serves as the structural test oracle.
+  fused     — two full-depth dots (signed + magnitude) + elementwise
+              combine; the Pallas kernel's HLO cost structure for
+              dry-run/roofline work (numerically == exact).
+
+Backends: ``jnp`` lowers everywhere (CPU, autodiff tracing, pjit);
+``pallas`` uses the TPU kernels in repro.kernels (interpret mode off
+TPU); ``auto`` resolves to pallas on TPU else jnp. Packing
+``bitplane_u8`` stores weights as two packed uint8 bitplanes, 2 bits per
+ternary weight (the memory-macro layout; 8x less HBM weight traffic than
+int8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as tern
+from repro.kernels import ref
+from repro.kernels.packed_mac import packed_cim_matmul
+from repro.kernels.ternary_mac import ternary_cim_matmul, ternary_exact_matmul
+
+FORMULATIONS = ("exact", "blocked", "corrected", "bitplane", "fused")
+BACKENDS = ("auto", "pallas", "jnp")
+PACKINGS = ("none", "bitplane_u8")
+FLAVORS = ("I", "II")
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMExecSpec:
+    """Declarative description of one ternary-MAC execution.
+
+    formulation: exact | blocked | corrected | bitplane | fused (or any
+      name later added via :func:`register_backend`).
+    backend:     auto | pallas | jnp ("auto" = pallas on TPU, else jnp).
+    packing:     none | bitplane_u8 (2-bit differential weight storage).
+    flavor:      "I" | "II" — identical MAC math; the flavors differ in
+      circuits/latency/energy (core/cost_model.py; see
+      :func:`spec_design` for the cost-model mapping).
+    block:       rows asserted per array cycle (paper N_A = 16).
+    adc_max:     ADC clamp bound for the a/b event counts (3-bit + extra
+      sense amp = 8). Only clamping formulations consume it.
+    error_prob:  per-block sensing-error probability (paper: 3.1e-3);
+      requires a PRNG key at :func:`execute` time when > 0.
+    """
+
+    formulation: str = "blocked"
+    backend: str = "auto"
+    packing: str = "none"
+    flavor: str = "I"
+    block: int = 16
+    adc_max: int = 8
+    error_prob: float = 0.0
+
+    def __post_init__(self):
+        # formulation/backend/packing are open sets: anything a plugin
+        # has put in the registry is valid, so validation accepts the
+        # built-ins plus every registered key dimension (typos still die
+        # early; genuinely new names registered via register_backend
+        # pass). "auto" stays backend-only.
+        if not self.formulation or not isinstance(self.formulation, str):
+            raise ValueError(f"bad formulation {self.formulation!r}")
+        formulations = set(FORMULATIONS) | {k[0] for k in _REGISTRY}
+        if self.formulation not in formulations:
+            raise ValueError(
+                f"unknown formulation {self.formulation!r} "
+                f"(use one of {sorted(formulations)})"
+            )
+        backends = set(BACKENDS) | {k[1] for k in _REGISTRY}
+        if self.backend not in backends:
+            raise ValueError(
+                f"unknown backend {self.backend!r} (use one of {sorted(backends)})"
+            )
+        packings = set(PACKINGS) | {k[2] for k in _REGISTRY}
+        if self.packing not in packings:
+            raise ValueError(
+                f"unknown packing {self.packing!r} (use one of {sorted(packings)})"
+            )
+        if self.flavor not in FLAVORS:
+            raise ValueError(f"unknown SiTe CiM flavor {self.flavor!r}")
+        if self.block <= 0:
+            raise ValueError(f"block must be positive, got {self.block}")
+        if self.adc_max <= 0:
+            raise ValueError(f"adc_max must be positive, got {self.adc_max}")
+
+    def resolve(self) -> "CiMExecSpec":
+        """Fix "auto" to a concrete backend for the current platform."""
+        if self.backend != "auto":
+            return self
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return dataclasses.replace(self, backend=backend)
+
+    @property
+    def clamps(self) -> bool:
+        entry = _REGISTRY.get(self.resolve().registry_key)
+        if entry is not None:
+            return entry.clamps
+        return self.formulation in ("blocked", "corrected", "bitplane")
+
+    @property
+    def registry_key(self) -> Tuple[str, str, str]:
+        return (self.formulation, self.backend, self.packing)
+
+    @property
+    def name(self) -> str:
+        return "/".join(self.registry_key)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendEntry:
+    fn: Callable  # fn(x2d, w, spec) -> (M, N); K already padded to tiles
+    clamps: bool  # whether the formulation applies the ADC clamp
+
+
+_REGISTRY: Dict[Tuple[str, str, str], BackendEntry] = {}
+
+
+def _parse_key(name) -> Tuple[str, str, str]:
+    if isinstance(name, tuple):
+        key = name
+    else:
+        key = tuple(str(name).split("/"))
+    if len(key) != 3:
+        raise ValueError(
+            f"backend key must be 'formulation/backend/packing', got {name!r}"
+        )
+    return key  # type: ignore[return-value]
+
+
+def register_backend(name, fn: Callable, *, clamps: bool = True) -> None:
+    """Register a MAC kernel under a ``"formulation/backend/packing"``
+    key (or an equivalent 3-tuple). ``fn(x2d, w_t, spec)`` receives the
+    flattened (M, K) inputs with K padded to the block/packing
+    granularity and must return the (M, N) product. ``clamps`` records
+    whether the formulation applies the per-block ADC clamp (tests use it
+    to pick the right oracle configuration)."""
+    key = _parse_key(name)
+    if key[1] == "auto":
+        raise ValueError("register concrete backends, not 'auto'")
+    _REGISTRY[key] = BackendEntry(fn, bool(clamps))
+
+
+def get_backend(spec: CiMExecSpec) -> BackendEntry:
+    key = spec.resolve().registry_key
+    entry = _REGISTRY.get(key)
+    if entry is None:
+        known = ", ".join("/".join(k) for k in sorted(_REGISTRY))
+        raise KeyError(f"no backend registered for {'/'.join(key)} (known: {known})")
+    return entry
+
+
+def registered_specs() -> Iterator[CiMExecSpec]:
+    """One CiMExecSpec per registered (formulation, backend, packing)."""
+    for f, b, p in sorted(_REGISTRY):
+        yield CiMExecSpec(formulation=f, backend=b, packing=p)
+
+
+# ---------------------------------------------------------------------------
+# The shared execution shim
+# ---------------------------------------------------------------------------
+
+
+def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _forward(spec: CiMExecSpec, x: jax.Array, w: jax.Array) -> jax.Array:
+    entry = get_backend(spec)
+    lead, k, n = x.shape[:-1], x.shape[-1], w.shape[-1]
+    x2 = x.reshape((-1, k))
+    mult = spec.block if spec.packing == "none" else math.lcm(spec.block, 8)
+    out = entry.fn(_pad_axis(x2, mult, 1), _pad_axis(w, mult, 0), spec)
+    return out.reshape(lead + (n,)).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ste_execute(spec: CiMExecSpec, x: jax.Array, w: jax.Array) -> jax.Array:
+    return _forward(spec, x, w)
+
+
+def _ste_fwd(spec, x, w):
+    return _ste_execute(spec, x, w), (x, w)
+
+
+def _ste_bwd(spec, res, g):
+    # Straight-through past the clamp: exact-matmul gradients (for the
+    # exact/fused formulations this IS the true gradient). Clamping
+    # formulations accumulate the STE backward in f32; exact/fused keep
+    # the operand dtype so backward TP partial-sum all-reduces stay at
+    # the activation width (bf16 in training — §Perf A4).
+    x, w = res
+    acc = jnp.float32 if spec.clamps else x.dtype
+    gf = g.astype(acc)
+    dx = jnp.einsum("...n,kn->...k", gf, w.astype(acc)).astype(x.dtype)
+    dw = jnp.einsum("...k,...n->kn", x.astype(acc), gf).astype(w.dtype)
+    return dx, dw
+
+
+_ste_execute.defvjp(_ste_fwd, _ste_bwd)
+
+_jit_execute = jax.jit(_ste_execute, static_argnums=(0,))
+
+
+def _apply_sense_channel(spec, out, k_dim, key):
+    """Shared post-MAC sensing-error application (validation + noise)."""
+    if spec.error_prob <= 0.0:
+        return out
+    if not spec.clamps:
+        raise ValueError(
+            f"the sensing-error channel models the ADC readout; the "
+            f"{spec.formulation!r} formulation has no ADC (use a "
+            f"clamping formulation or error_prob=0)"
+        )
+    if key is None:
+        raise ValueError("spec.error_prob > 0 requires a PRNG key")
+    kb = -(-k_dim // spec.block)
+    noise = _sense_noise(key, out.shape, kb, spec.error_prob, out.dtype)
+    return out + jax.lax.stop_gradient(noise)
+
+
+def _sense_noise(key, shape, kb: int, prob: float, dtype) -> jax.Array:
+    """Additive equivalent of the per-block ±1 ADC-level error channel:
+    each of the ``kb`` block partials behind an output flips one level
+    with probability ``prob``; the PCU sums them."""
+    ku, ks = jax.random.split(key)
+    flip = jax.random.bernoulli(ku, prob, shape + (kb,))
+    base = dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.int32
+    sign = jax.random.rademacher(ks, shape + (kb,), dtype=base)
+    return jnp.sum(flip.astype(base) * sign, axis=-1).astype(dtype)
+
+
+def execute(
+    spec: CiMExecSpec,
+    x_t: jax.Array,
+    w_t: jax.Array,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Run one ternary MAC under ``spec``.
+
+    x_t: (..., K) ternary values in {-1, 0, +1} (any numeric dtype).
+    w_t: (K, N) ternary values.
+    key: PRNG key for the sensing-error channel (required iff
+      ``spec.error_prob > 0``).
+
+    Returns (..., N) in the dtype of ``x_t``, with gradients defined
+    straight-through (exact-matmul backward).
+
+    NOTE: with ``packing="bitplane_u8"`` this functional entry point
+    packs ``w_t`` on the fly inside the forward — correct, and what the
+    equivalence tests pin, but it realizes none of the packed format's
+    weight-traffic savings. Serving should pack offline
+    (``quant.prepare.prepare_for_spec``) and call
+    :func:`execute_packed` with the stored planes.
+    """
+    spec = spec.resolve()
+    clean = dataclasses.replace(spec, error_prob=0.0)
+    out = _jit_execute(clean, x_t, w_t)
+    return _apply_sense_channel(spec, out, x_t.shape[-1], key)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _packed_forward(spec, x, w_pos, w_neg):
+    lead, k = x.shape[:-1], x.shape[-1]
+    n = w_pos.shape[-1]
+    x2 = x.reshape((-1, k))
+    mult = math.lcm(spec.block, 8)
+    out = _packed_stored(
+        _pad_axis(x2, mult, 1),
+        _pad_axis(w_pos, mult // 8, 0),
+        _pad_axis(w_neg, mult // 8, 0),
+        spec,
+    )
+    return out.reshape(lead + (n,)).astype(x.dtype)
+
+
+def execute_packed(
+    spec: CiMExecSpec,
+    x_t: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Packed-weight fast path: run a ternary MAC from **pre-packed**
+    (M1, M2) bitplanes — the 2-bit storage format ``quant.prepare``
+    emits — without ever materializing the dense weight or re-packing
+    per call (this is where the 8x-vs-int8 weight-traffic saving of
+    ``bitplane_u8`` is actually realized; :func:`execute` with
+    ``packing="bitplane_u8"`` packs on the fly and is for functional
+    work only).
+
+    x_t: (..., K) ternary values; w_pos/w_neg: (K/8, N) uint8 planes
+    (``repro.core.ternary.pack_ternary`` layout along K). The spec's
+    formulation selects clamped ("blocked") or exact MAC semantics.
+    Inference path — no custom VJP is defined over the packed planes.
+    """
+    spec = spec.resolve()
+    if spec.packing != "bitplane_u8":
+        raise ValueError("execute_packed requires packing='bitplane_u8'")
+    if spec.formulation not in ("exact", "blocked"):
+        raise ValueError(
+            f"packed kernels implement exact|blocked, not {spec.formulation!r}"
+        )
+    if x_t.shape[-1] != w_pos.shape[0] * 8 or w_pos.shape != w_neg.shape:
+        raise ValueError(
+            f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
+            f"planes {w_pos.shape} / {w_neg.shape}"
+        )
+    clean = dataclasses.replace(spec, error_prob=0.0)
+    out = _packed_forward(clean, x_t, w_pos, w_neg)
+    return _apply_sense_channel(spec, out, x_t.shape[-1], key)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---- jnp ------------------------------------------------------------------
+
+
+def _exact_jnp(x2, w, spec):
+    # operand-dtype dot: keeps TP partial-sum all-reduces at the
+    # activation width (bf16 in training — §Perf A4)
+    return jnp.einsum("mk,kn->mn", x2, w.astype(x2.dtype))
+
+
+def _blocked_jnp(x2, w, spec):
+    return ref.ref_cim_matmul(
+        x2.astype(jnp.float32), w.astype(jnp.float32),
+        block=spec.block, adc_max=spec.adc_max,
+    )
+
+
+def _corrected_jnp(x2, w, spec):
+    """exact + sum_blk(relu(b-adc) - relu(a-adc)): the bulk contraction
+    is one full-depth MXU matmul; only the rare saturation correction
+    needs blocked arithmetic (DESIGN.md §2)."""
+    xf = x2.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    exact = xf @ wf
+    kb = xf.shape[1] // spec.block
+    xb = xf.reshape(xf.shape[0], kb, spec.block)
+    wb = wf.reshape(kb, spec.block, wf.shape[1])
+    p = jnp.einsum("mki,kin->mkn", xb, wb)
+    m = jnp.einsum("mki,kin->mkn", jnp.abs(xb), jnp.abs(wb))
+    a = (m + p) * 0.5
+    b = (m - p) * 0.5
+    adc = float(spec.adc_max)
+    corr = jnp.maximum(b - adc, 0.0) - jnp.maximum(a - adc, 0.0)
+    return exact + jnp.sum(corr, axis=1)
+
+
+def _bitplane_jnp(x2, w, spec):
+    """Event counting over (M1, M2) bitplanes — mirrors the circuit:
+    a = #(RWL1&M1) + #(RWL2&M2), b = #(RWL1&M2) + #(RWL2&M1)."""
+    m1 = (w > 0).astype(jnp.int32)
+    m2 = (w < 0).astype(jnp.int32)
+    r1 = (x2 > 0).astype(jnp.int32)
+    r2 = (x2 < 0).astype(jnp.int32)
+    kb = x2.shape[1] // spec.block
+    r1b = r1.reshape(r1.shape[0], kb, spec.block)
+    r2b = r2.reshape(r2.shape[0], kb, spec.block)
+    m1b = m1.reshape(kb, spec.block, m1.shape[1])
+    m2b = m2.reshape(kb, spec.block, m2.shape[1])
+    a = jnp.einsum("mki,kin->mkn", r1b, m1b) + jnp.einsum("mki,kin->mkn", r2b, m2b)
+    b = jnp.einsum("mki,kin->mkn", r1b, m2b) + jnp.einsum("mki,kin->mkn", r2b, m1b)
+    part = jnp.minimum(a, spec.adc_max) - jnp.minimum(b, spec.adc_max)
+    return jnp.sum(part, axis=1)
+
+
+def _fused_jnp(x2, w, spec):
+    """Pallas-kernel cost structure: signed + magnitude full-depth dots,
+    elementwise combine (== exact; per-block clamping happens inside the
+    kernel's VMEM tiles on TPU). The large `minimum` bound keeps XLA from
+    folding the magnitude dot away."""
+    wd = w.astype(x2.dtype)
+    p = jnp.einsum("mk,kn->mn", x2, wd)
+    m = jnp.einsum("mk,kn->mn", jnp.abs(x2), jnp.abs(wd))
+    big = jnp.asarray(2.0**14, jnp.float32)
+    pf, mf = p.astype(jnp.float32), m.astype(jnp.float32)
+    return jnp.minimum((mf + pf) * 0.5, big) - jnp.minimum((mf - pf) * 0.5, big)
+
+
+# ---- pallas ---------------------------------------------------------------
+
+
+def _blocked_pallas(x2, w, spec):
+    m, _ = x2.shape
+    n = w.shape[1]
+    xp = _pad_axis(_pad_axis(x2, 128, 0), 128, 1)
+    wp = _pad_axis(_pad_axis(w, 128, 0), 128, 1)
+    out = ternary_cim_matmul(
+        xp.astype(jnp.bfloat16), wp.astype(jnp.bfloat16),
+        block=spec.block, adc_max=spec.adc_max,
+        interpret=not _on_tpu(),
+    )
+    return out[:m, :n]
+
+
+def _exact_pallas(x2, w, spec):
+    m, _ = x2.shape
+    n = w.shape[1]
+    xp = _pad_axis(_pad_axis(x2, 128, 0), 512, 1)
+    wp = _pad_axis(_pad_axis(w, 512, 0), 128, 1)
+    out = ternary_exact_matmul(
+        xp.astype(jnp.bfloat16), wp.astype(jnp.bfloat16),
+        interpret=not _on_tpu(),
+    )
+    return out[:m, :n]
+
+
+def _packed(x2, w, spec, cim: bool, pallas: bool):
+    m, _ = x2.shape
+    n = w.shape[1]
+    if pallas:
+        xp = _pad_axis(_pad_axis(x2, 128, 0), 256, 1)
+        wp = _pad_axis(_pad_axis(w, 256, 0), 128, 1)
+        w_pos, w_neg = tern.pack_ternary(wp.astype(jnp.int8), axis=0)
+        out = packed_cim_matmul(
+            xp.astype(jnp.bfloat16), w_pos, w_neg,
+            block=spec.block, adc_max=spec.adc_max, cim=cim,
+            interpret=not _on_tpu(),
+        )
+        return out[:m, :n]
+    w_pos, w_neg = tern.pack_ternary(w.astype(jnp.int8), axis=0)
+    return ref.ref_packed_matmul(
+        x2.astype(jnp.float32), w_pos, w_neg,
+        block=spec.block, adc_max=spec.adc_max, cim=cim,
+    )[:, :n]
+
+
+def _packed_stored(x2, w_pos, w_neg, spec):
+    """Packed MAC from stored planes (no per-call pack) — the
+    execute_packed fast path."""
+    m = x2.shape[0]
+    n = w_pos.shape[1]
+    cim = spec.clamps
+    if spec.backend == "pallas":
+        xp = _pad_axis(_pad_axis(x2, 128, 0), 256, 1)
+        pp = _pad_axis(_pad_axis(w_pos, 32, 0), 128, 1)
+        pn = _pad_axis(_pad_axis(w_neg, 32, 0), 128, 1)
+        out = packed_cim_matmul(
+            xp.astype(jnp.bfloat16), pp, pn,
+            block=spec.block, adc_max=spec.adc_max, cim=cim,
+            interpret=not _on_tpu(),
+        )
+        return out[:m, :n]
+    return ref.ref_packed_matmul(
+        x2.astype(jnp.float32), w_pos, w_neg,
+        block=spec.block, adc_max=spec.adc_max, cim=cim,
+    )
+
+
+register_backend("exact/jnp/none", _exact_jnp, clamps=False)
+register_backend("exact/pallas/none", _exact_pallas, clamps=False)
+register_backend(
+    "exact/jnp/bitplane_u8",
+    functools.partial(_packed, cim=False, pallas=False), clamps=False,
+)
+register_backend(
+    "exact/pallas/bitplane_u8",
+    functools.partial(_packed, cim=False, pallas=True), clamps=False,
+)
+register_backend("blocked/jnp/none", _blocked_jnp, clamps=True)
+register_backend("blocked/pallas/none", _blocked_pallas, clamps=True)
+register_backend(
+    "blocked/jnp/bitplane_u8",
+    functools.partial(_packed, cim=True, pallas=False), clamps=True,
+)
+register_backend(
+    "blocked/pallas/bitplane_u8",
+    functools.partial(_packed, cim=True, pallas=True), clamps=True,
+)
+register_backend("corrected/jnp/none", _corrected_jnp, clamps=True)
+register_backend("bitplane/jnp/none", _bitplane_jnp, clamps=True)
+register_backend("fused/jnp/none", _fused_jnp, clamps=False)
+
+
+# ---------------------------------------------------------------------------
+# Spec -> array-cost-model mapping (paper Section V / core/cost_model.py)
+# ---------------------------------------------------------------------------
+
+
+def spec_design(spec: CiMExecSpec) -> str:
+    """Map an execution spec onto the paper's array designs. "exact" is
+    the near-memory baseline; every CiM formulation — including "fused",
+    the Pallas kernel's cost stand-in — executes on a SiTe array, flavor
+    choosing I vs II. Unknown (plugged-in) formulations fall back on
+    whether they clamp."""
+    if spec.formulation == "exact":
+        return "NM"
+    if spec.formulation in FORMULATIONS or spec.clamps:
+        return "CiM-II" if spec.flavor == "II" else "CiM-I"
+    return "NM"
+
+
+def spec_array_cost(spec: CiMExecSpec, tech: str = "8T-SRAM"):
+    """Absolute array-level cost (latency/energy/area) of executing this
+    spec on ``tech`` — the dry-run/roofline's bridge from the execution
+    API to the paper's Figs 9/11 cost model."""
+    from repro.core import cost_model as cm
+
+    return cm.array_cost(tech, spec_design(spec))
+
+
+def spec_cost_summary(spec: CiMExecSpec, tech: str = "8T-SRAM") -> Dict[str, float]:
+    cost = spec_array_cost(spec, tech)
+    return {
+        "tech": cost.tech,
+        "design": cost.design,
+        "mac_pass_ns": cost.mac_pass_ns,
+        "mac_pass_pj": cost.mac_pass_pj,
+        "macro_area_vs_nm": cost.macro_area,
+    }

@@ -28,13 +28,20 @@ counting, we use the exact identity
     a = (m_blk + p_blk) / 2,   b = (m_blk - p_blk) / 2
 
 so the array semantics become two (blocked) matmuls + elementwise clamp —
-an MXU-native formulation. ``site_cim_matmul`` below is the reference
-implementation; ``repro.kernels`` holds the Pallas kernels.
+an MXU-native formulation.
+
+NOTE: the public matmul entry points in this module are **deprecated
+aliases**. The implementation (and every other ternary-MAC kernel) lives
+behind the declarative execution API in ``repro.core.execution``
+(re-exported as ``repro.api``); each alias below simply builds a
+``CiMExecSpec`` from its ``SiTeCiMConfig`` and forwards to
+``execute(spec, x_t, w_t)``. New call sites should use ``repro.api``
+directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -93,34 +100,33 @@ def scalar_product(i: jax.Array, w: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Block MAC: a/b decomposition + ADC clamp
+# Deprecated aliases over the execution registry
 # ---------------------------------------------------------------------------
 
-def _block_ab(xb: jax.Array, wb: jax.Array, precision=None):
-    """Per-block event counts.
-
-    xb: (..., KB, B) ternary inputs, wb: (KB, B, N) ternary weights.
-    Returns a, b with shape (..., KB, N): the number of +1 / -1 scalar
-    products per 16-row block per output column (RBL1/RBL2 counts).
-    """
-    p = jnp.einsum("...ki,kin->...kn", xb, wb, precision=precision)
-    m = jnp.einsum("...ki,kin->...kn", jnp.abs(xb), jnp.abs(wb), precision=precision)
-    a = (m + p) * 0.5 if jnp.issubdtype(p.dtype, jnp.floating) else (m + p) // 2
-    b = (m - p) * 0.5 if jnp.issubdtype(p.dtype, jnp.floating) else (m - p) // 2
-    return a, b
+def _warn_ignored_precision(precision) -> None:
+    if precision is not None:
+        warnings.warn(
+            "the `precision` argument of the deprecated site_cim aliases is "
+            "ignored: the execution shim (repro.core.execution) owns the "
+            "dtype/precision policy",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
-def _apply_sense_error(partial: jax.Array, key: jax.Array, prob: float) -> jax.Array:
-    """Stochastic sensing-error channel: with probability ``prob`` a block
-    partial reads one ADC level off (+/-1), the adjacent-level error mode
-    that the SM analysis bounds."""
-    ku, ks = jax.random.split(key)
-    flip = jax.random.bernoulli(ku, prob, partial.shape)
-    sign = jax.random.rademacher(ks, partial.shape, dtype=partial.dtype)
-    return partial + flip.astype(partial.dtype) * sign
+def _spec_from_config(config: SiTeCiMConfig, formulation: str):
+    from repro.core import execution as xapi
+
+    return xapi.CiMExecSpec(
+        formulation=formulation,
+        backend="jnp",
+        flavor=config.flavor,
+        block=config.block,
+        adc_max=config.adc_max,
+        error_prob=config.error_prob,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("config", "precision"))
 def site_cim_matmul(
     x_t: jax.Array,
     w_t: jax.Array,
@@ -128,7 +134,8 @@ def site_cim_matmul(
     key: Optional[jax.Array] = None,
     precision=None,
 ) -> jax.Array:
-    """Signed-ternary MAC with SiTe CiM array semantics.
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "blocked" formulation (per-16-row a/b event counts + ADC clamp).
 
     Args:
       x_t: (..., K) ternary inputs in {-1, 0, 1} (any numeric dtype).
@@ -140,105 +147,62 @@ def site_cim_matmul(
     Returns:
       (..., N) integer-valued dot products with per-16-row-block 3-bit ADC
       saturation: ``sum_blk clip8(a_blk) - clip8(b_blk)``.
+
+    Gradient-semantics change vs. the pre-API implementation: the shim
+    defines a straight-through VJP (exact-matmul backward everywhere),
+    where the old jnp body autodiffed through the clamp (zero gradient
+    in saturated blocks). STE is the trained-model semantic the layer
+    stack always used (kernels.ops.cim_matmul); clamp-sensitivity work
+    should differentiate the "bitplane"/"blocked" registry fns directly.
     """
-    k = x_t.shape[-1]
-    block = config.block
-    pad = (-k) % block
-    if pad:
-        x_t = jnp.pad(x_t, [(0, 0)] * (x_t.ndim - 1) + [(0, pad)])
-        w_t = jnp.pad(w_t, [(0, pad), (0, 0)])
-        k += pad
-    kb = k // block
-    xb = x_t.reshape(x_t.shape[:-1] + (kb, block))
-    wb = w_t.reshape((kb, block) + w_t.shape[1:])
-    a, b = _block_ab(xb, wb, precision=precision)
-    adc_max = jnp.asarray(config.adc_max, a.dtype)
-    partial = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
-    if config.error_prob > 0.0:
-        if key is None:
-            raise ValueError("error_prob > 0 requires a PRNG key")
-        partial = _apply_sense_error(partial, key, config.error_prob)
-    # PCU digital accumulation across blocks.
-    return jnp.sum(partial, axis=-2)
+    _warn_ignored_precision(precision)
+    from repro.core import execution as xapi
+
+    return xapi.execute(_spec_from_config(config, "blocked"), x_t, w_t, key=key)
 
 
-@functools.partial(jax.jit, static_argnames=("precision",))
 def nm_ternary_matmul(x_t: jax.Array, w_t: jax.Array, precision=None) -> jax.Array:
-    """Near-memory baseline: exact ternary dot product (row-by-row digital
-    MAC — no ADC clamp). Functionally this is a plain matmul; the paper's
-    NM/CiM difference is in latency/energy (core/cost_model.py)."""
-    return jnp.einsum("...k,kn->...n", x_t, w_t, precision=precision)
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "exact" formulation (near-memory baseline: row-by-row digital MAC,
+    no ADC clamp; the NM/CiM difference is cost, core/cost_model.py)."""
+    _warn_ignored_precision(precision)
+    from repro.core import execution as xapi
+
+    spec = xapi.CiMExecSpec(formulation="exact", backend="jnp")
+    return xapi.execute(spec, x_t, w_t)
 
 
-@functools.partial(jax.jit, static_argnames=("config", "precision"))
 def site_cim_matmul_corrected(
     x_t: jax.Array,
     w_t: jax.Array,
     config: SiTeCiMConfig = PAPER_CIM_I,
     precision=None,
 ) -> jax.Array:
-    """Clip-as-correction formulation (DESIGN.md §2, beyond-paper opt).
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "corrected" (clip-as-correction) formulation: exact_dot +
+    sum_blk (relu(b_blk - 8) - relu(a_blk - 8)), numerically identical to
+    :func:`site_cim_matmul` with error_prob=0 but with the bulk
+    contraction as one full-depth MXU matmul (DESIGN.md §2).
 
-    exact_dot + sum_blk (relu(b_blk - 8) - relu(a_blk - 8)) — numerically
-    identical to :func:`site_cim_matmul` with error_prob=0, but the bulk
-    contraction is a full-depth MXU matmul; only the (rare) saturation
-    correction needs blocked arithmetic.
-    """
-    k = x_t.shape[-1]
-    block = config.block
-    pad = (-k) % block
-    if pad:
-        x_t = jnp.pad(x_t, [(0, 0)] * (x_t.ndim - 1) + [(0, pad)])
-        w_t = jnp.pad(w_t, [(0, pad), (0, 0)])
-        k += pad
-    exact = jnp.einsum("...k,kn->...n", x_t, w_t, precision=precision)
-    kb = k // block
-    xb = x_t.reshape(x_t.shape[:-1] + (kb, block))
-    wb = w_t.reshape((kb, block) + w_t.shape[1:])
-    a, b = _block_ab(xb, wb, precision=precision)
-    adc_max = jnp.asarray(config.adc_max, a.dtype)
-    corr = jnp.maximum(b - adc_max, 0) - jnp.maximum(a - adc_max, 0)
-    return exact + jnp.sum(corr, axis=-2)
+    Gradients are straight-through (see :func:`site_cim_matmul`)."""
+    _warn_ignored_precision(precision)
+    from repro.core import execution as xapi
 
+    return xapi.execute(_spec_from_config(config, "corrected"), x_t, w_t)
 
-# ---------------------------------------------------------------------------
-# Bitplane (event-counting) reference — mirrors the hardware directly
-# ---------------------------------------------------------------------------
 
 def site_cim_matmul_bitplane(
     x_t: jax.Array, w_t: jax.Array, config: SiTeCiMConfig = PAPER_CIM_I
 ) -> jax.Array:
-    """Event-counting formulation over (M1, M2) bitplanes:
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "bitplane" (event-counting) formulation:
 
         a = #(RWL1 & M1) + #(RWL2 & M2)   (RBL1 discharge events)
         b = #(RWL1 & M2) + #(RWL2 & M1)   (RBL2 discharge events)
 
-    Slower on TPU than the matmul form; used as a structural oracle in
-    tests to pin the functional model to the circuit description.
+    Slower on TPU than the matmul form; the structural oracle the test
+    suite pins every other registered backend against.
     """
-    m1 = (w_t > 0).astype(jnp.int32)
-    m2 = (w_t < 0).astype(jnp.int32)
-    r1 = (x_t > 0).astype(jnp.int32)
-    r2 = (x_t < 0).astype(jnp.int32)
-    k = x_t.shape[-1]
-    block = config.block
-    pad = (-k) % block
-    if pad:
-        r1 = jnp.pad(r1, [(0, 0)] * (r1.ndim - 1) + [(0, pad)])
-        r2 = jnp.pad(r2, [(0, 0)] * (r2.ndim - 1) + [(0, pad)])
-        m1 = jnp.pad(m1, [(0, pad), (0, 0)])
-        m2 = jnp.pad(m2, [(0, pad), (0, 0)])
-        k += pad
-    kb = k // block
+    from repro.core import execution as xapi
 
-    def blk(v, lead):
-        if lead:
-            return v.reshape(v.shape[:-1] + (kb, block))
-        return v.reshape((kb, block) + v.shape[1:])
-
-    r1b, r2b = blk(r1, True), blk(r2, True)
-    m1b, m2b = blk(m1, False), blk(m2, False)
-    a = jnp.einsum("...ki,kin->...kn", r1b, m1b) + jnp.einsum("...ki,kin->...kn", r2b, m2b)
-    b = jnp.einsum("...ki,kin->...kn", r1b, m2b) + jnp.einsum("...ki,kin->...kn", r2b, m1b)
-    partial = jnp.minimum(a, config.adc_max) - jnp.minimum(b, config.adc_max)
-    return jnp.sum(partial, axis=-2)
+    return xapi.execute(_spec_from_config(config, "bitplane"), x_t, w_t)

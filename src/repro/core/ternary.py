@@ -27,8 +27,9 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 # TWN threshold factor: delta = 0.7 * E[|w|] (Li et al., "Ternary Weight
-# Networks"). The paper builds on ternary DNNs trained this way.
-TWN_THRESHOLD_FACTOR = 0.75
+# Networks", Eq. 6). The paper builds on ternary DNNs trained this way.
+# Configurable per layer stack via QuantConfig.threshold_factor.
+TWN_THRESHOLD_FACTOR = 0.7
 
 
 def ternary_threshold(x: jax.Array, axis=None, factor: float = TWN_THRESHOLD_FACTOR) -> jax.Array:

@@ -1,0 +1,13 @@
+"""Distribution utilities: sharding rules and explicit collectives."""
+from repro.dist import collectives, sharding  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    batch_axes,
+    cache_specs,
+    disable_activation_sharding,
+    enable_activation_sharding,
+    model_axis_size,
+    param_specs,
+    shard_act,
+    tree_paths,
+    use_mesh,
+)

@@ -1,24 +1,23 @@
-"""Public jit'd wrappers over the ternary CiM kernels.
+"""Deprecated jit'd wrappers over the ternary CiM kernels.
 
-Layer code calls :func:`cim_matmul` — it handles arbitrary leading batch
-dims, pads to kernel tiles, dispatches to the Pallas kernel on TPU (or its
-interpret-mode twin / the pure-jnp formulation on CPU), and defines a
-custom VJP: the backward pass treats the CiM array as a straight-through
-exact matmul (standard STE practice for the clamp nonlinearity — the ADC
-clamp is piecewise linear with slope 1 almost everywhere the forward
-saturates rarely, see DESIGN.md).
+Historically layer code called :func:`cim_matmul` directly; dispatch now
+lives in the declarative execution API (``repro.api`` /
+``repro.core.execution``): a ``CiMExecSpec`` names the formulation,
+backend, and packing, and a registry maps it to a kernel. The wrappers
+below are kept for source compatibility — each one builds the equivalent
+spec and forwards to ``execute(spec, x, w)``, which owns batch-dim
+flattening, tile padding, dtype policy, and the STE custom_vjp (backward
+treats the CiM array as a straight-through exact matmul — the ADC clamp
+is piecewise linear with slope 1 almost everywhere, see DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.packed_mac import packed_cim_matmul  # noqa: F401 (re-export)
-from repro.kernels.ternary_mac import (
+from repro.kernels.ternary_mac import (  # noqa: F401 (re-export)
     DEFAULT_ADC_MAX,
     DEFAULT_BLOCK,
     ternary_cim_matmul,
@@ -28,43 +27,6 @@ from repro.kernels.ternary_mac import (
 Backend = Literal["auto", "pallas", "jnp"]
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    cfg = [(0, 0)] * x.ndim
-    cfg[axis] = (0, pad)
-    return jnp.pad(x, cfg)
-
-
-def _cim_forward(x2d, w, block, adc_max, backend):
-    """(M, K) x (K, N) CiM product, tiles padded as needed."""
-    m, k = x2d.shape
-    n = w.shape[1]
-    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
-    if use_pallas:
-        xp = _pad_to(_pad_to(x2d, 128, 0), 128, 1)
-        wp = _pad_to(_pad_to(w, 128, 0), 128, 1)
-        out = ternary_cim_matmul(
-            xp.astype(jnp.bfloat16),
-            wp.astype(jnp.bfloat16),
-            block=block,
-            adc_max=adc_max,
-            interpret=not _on_tpu(),
-        )
-        return out[:m, :n]
-    # jnp formulation — identical math, lowers everywhere (CPU dry-run,
-    # autodiff tracing, sharded pjit).
-    xp = _pad_to(x2d.astype(jnp.float32), block, 1)
-    wp = _pad_to(w.astype(jnp.float32), block, 0)
-    return ref.ref_cim_matmul(xp, wp, block=block, adc_max=adc_max)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def cim_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -72,49 +34,26 @@ def cim_matmul(
     adc_max: int = DEFAULT_ADC_MAX,
     backend: Backend = "auto",
 ) -> jax.Array:
-    """Signed-ternary CiM matmul with STE gradients.
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "blocked" formulation.
 
     x: (..., K) ternary values; w: (K, N) ternary values.
     Forward: per-``block`` ADC-clamped MAC. Backward: exact-matmul
     gradients (straight-through past the clamp).
     """
-    lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
-    out = _cim_forward(x2d, w, block, adc_max, backend)
-    return out.reshape(lead + (w.shape[1],)).astype(x.dtype)
+    # import inside the function: repro.core.execution registers the
+    # kernels from this package, so the module-level import would cycle
+    from repro.core import execution as xapi
 
-
-def _cim_fwd(x, w, block, adc_max, backend):
-    return cim_matmul(x, w, block, adc_max, backend), (x, w)
-
-
-def _cim_bwd(block, adc_max, backend, res, g):
-    x, w = res
-    gf = g.astype(jnp.float32)
-    dx = (gf @ w.astype(jnp.float32).T).astype(x.dtype)
-    x2d = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    g2d = gf.reshape(-1, g.shape[-1])
-    dw = (x2d.T @ g2d).astype(w.dtype)
-    return dx, dw
-
-
-cim_matmul.defvjp(_cim_fwd, _cim_bwd)
+    spec = xapi.CiMExecSpec(
+        formulation="blocked", backend=backend, block=block, adc_max=adc_max
+    )
+    return xapi.execute(spec, x, w)
 
 
 def exact_ternary_matmul(x: jax.Array, w: jax.Array, backend: Backend = "auto") -> jax.Array:
-    """Near-memory baseline product (no clamp), kernel-backed on TPU."""
-    lead = x.shape[:-1]
-    x2d = x.reshape(-1, x.shape[-1])
-    m, k = x2d.shape
-    n = w.shape[1]
-    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
-    if use_pallas:
-        xp = _pad_to(_pad_to(x2d, 128, 0), 512, 1)
-        wp = _pad_to(_pad_to(w, 512, 0), 128, 1)
-        out = ternary_exact_matmul(
-            xp.astype(jnp.bfloat16), wp.astype(jnp.bfloat16),
-            interpret=not _on_tpu(),
-        )[:m, :n]
-    else:
-        out = ref.ref_exact_matmul(x2d, w)
-    return out.reshape(lead + (n,)).astype(x.dtype)
+    """Deprecated alias — forwards to ``repro.api.execute`` with the
+    "exact" formulation (near-memory baseline, kernel-backed on TPU)."""
+    from repro.core import execution as xapi
+
+    return xapi.execute(xapi.CiMExecSpec(formulation="exact", backend=backend), x, w)

@@ -147,7 +147,7 @@ def lower_cell(
             def step(state, batch):
                 return ts.train_step(state, batch, cfg, opt_cfg)
 
-            with jax.set_mesh(mesh):
+            with shd.use_mesh(mesh):
                 lowered = jax.jit(
                     step,
                     in_shardings=(state_sh, batch_sh),
@@ -165,7 +165,7 @@ def lower_cell(
             def step(params, batch):
                 return T.forward(params, batch, cfg)
 
-            with jax.set_mesh(mesh):
+            with shd.use_mesh(mesh):
                 lowered = jax.jit(
                     step, in_shardings=(params_sh, batch_sh)
                 ).lower(params_shapes, specs)
@@ -195,7 +195,7 @@ def lower_cell(
             if enc_in_specs:
                 args.append(specs["enc"])
                 in_sh.append(batch_sh["enc"])
-            with jax.set_mesh(mesh):
+            with shd.use_mesh(mesh):
                 lowered = jax.jit(
                     step,
                     in_shardings=tuple(in_sh),
@@ -216,6 +216,14 @@ def lower_cell(
         # launch/hlo_analysis.py for why compiled.cost_analysis() cannot
         # be used on this backend).
         hc = hlo_analysis.analyze(hlo, chips)
+        # execution-spec -> paper cost-model mapping: which array design
+        # (NM / CiM-I / CiM-II) this cell's MACs would execute on, with
+        # the Figs 9/11-calibrated per-MAC-pass cost attached.
+        cim_array = None
+        if cfg.quant.mode != "off":
+            from repro.core import execution as xapi
+
+            cim_array = xapi.spec_cost_summary(cfg.quant.resolved_spec())
         roof = rl.Roofline(
             arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
             flops=hc.flops * chips,            # whole-job FLOPs
@@ -223,6 +231,7 @@ def lower_cell(
             coll_bytes=hc.coll_bytes,          # per-device
             coll_breakdown=dict(hc.coll),
             model_flops=rl.model_flops_estimate(cfg, shape, shape.kind),
+            cim_array=cim_array,
         )
         res = CellResult(
             arch, shape_name, mesh_name, ok=True, seconds=time.time() - t0,

@@ -110,6 +110,9 @@ class Roofline:
     coll_breakdown: Dict[str, float]
     model_flops: float          # 6*N*D (or 6*N_active*D) useful flops
     bytes_per_device: Optional[float] = None
+    # execution-spec -> array-design cost mapping (core/cost_model.py via
+    # repro.core.execution.spec_cost_summary); None for fp cells
+    cim_array: Optional[Dict[str, float]] = None
 
     @property
     def t_compute(self) -> float:
@@ -158,6 +161,7 @@ class Roofline:
             "roofline_fraction": self.roofline_fraction,
             "useful_flops_ratio": self.useful_flops_ratio,
             "bytes_per_device": self.bytes_per_device,
+            "cim_array": self.cim_array,
         }
 
 

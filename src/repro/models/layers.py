@@ -9,11 +9,15 @@ the paper's technique as a first-class mode switch:
                            paper's accelerator executes),
   * quant_mode="cim"     — STE-ternarized weights & activations computed
                            with the SiTe CiM array semantics (16-row block
-                           ADC clamp) via repro.kernels.ops.cim_matmul.
+                           ADC clamp) via the execution API
+                           (repro.api.execute with a CiMExecSpec).
 
-Scales: output = (x_t @ w_t) * sx * sw  — per-tensor activation scale,
-per-output-channel weight scale, both folded after the ternary MAC, which
-is exactly where the TiM-DNN peripheral applies them.
+Every ternary MAC goes through ``repro.core.execution.execute``: the
+``QuantConfig`` mode (plus an optional explicit ``exec_spec`` override)
+resolves to a declarative ``CiMExecSpec``, and the registry picks the
+kernel. Scales: output = (x_t @ w_t) * sx * sw  — per-tensor activation
+scale, per-output-channel weight scale, both folded after the ternary
+MAC, which is exactly where the TiM-DNN peripheral applies them.
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ternary as tern
-from repro.kernels import ops as kops
+from repro.core.execution import CiMExecSpec, execute as exec_mac
 
 Param = jax.Array
 
@@ -81,6 +85,13 @@ class QuantConfig:
     adc_max: int = 8             # 3-bit ADC + extra SA
     quantize_activations: bool = True
     corrected: bool = False      # clip-as-correction formulation (perf opt)
+    # TWN threshold factor: delta = factor * E[|w|] (Li et al.)
+    threshold_factor: float = tern.TWN_THRESHOLD_FACTOR
+    # Explicit execution spec. When set it overrides the mode-derived
+    # spec entirely (new backends/formulations plug in here without any
+    # layer-code change); when None, ``resolved_spec`` derives one from
+    # (mode, block, adc_max, corrected).
+    exec_spec: Optional[CiMExecSpec] = None
     # Serving: weights were ternarized offline (quant.prepare) — skip the
     # per-step STE re-quantization (which costs ~4 passes over every
     # weight). Per-channel scales are folded into the stored weights.
@@ -89,24 +100,57 @@ class QuantConfig:
     def __post_init__(self):
         if self.mode not in ("off", "ternary", "cim", "cim_fused"):
             raise ValueError(self.mode)
+        if self.mode == "off" and self.exec_spec is not None:
+            # dense() short-circuits to the fp matmul on mode="off" and
+            # would never consult the spec — reject rather than ignore
+            raise ValueError(
+                "exec_spec has no effect with mode='off'; pick a "
+                "quantized mode (serve.engine.apply_exec_spec upgrades "
+                "the mode for you)"
+            )
+
+    def resolved_spec(self) -> CiMExecSpec:
+        """The CiMExecSpec this config executes ternary MACs under."""
+        if self.exec_spec is not None:
+            return self.exec_spec
+        if self.mode == "off":
+            # fp baseline executes no ternary MAC — fabricating a CiM
+            # spec here would attribute CiM semantics/costs to a model
+            # that never runs them (dense() short-circuits before this)
+            raise ValueError("mode='off' has no CiM execution spec")
+        if self.mode == "ternary":
+            # operand-dtype exact dot (bf16 TP all-reduces — §Perf A4)
+            return CiMExecSpec(formulation="exact", backend="jnp",
+                               block=self.block, adc_max=self.adc_max)
+        if self.mode == "cim_fused":
+            return CiMExecSpec(formulation="fused", backend="jnp",
+                               block=self.block, adc_max=self.adc_max)
+        formulation = "corrected" if self.corrected else "blocked"
+        backend = "jnp" if self.corrected else "auto"
+        return CiMExecSpec(formulation=formulation, backend=backend,
+                           block=self.block, adc_max=self.adc_max)
 
 
-def _ternarize_weight(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _ternarize_weight(
+    w: jax.Array, factor: float = tern.TWN_THRESHOLD_FACTOR
+) -> Tuple[jax.Array, jax.Array]:
     """Per-output-channel (last dim) ternarization with STE.
 
     Returns (w_t, scale) where w_t in {-1,0,1} and scale has shape (1, N).
     Gradients flow straight-through to the latent fp weight.
     """
-    t, scale = tern.ternarize(w, axis=tuple(range(w.ndim - 1)))
+    t, scale = tern.ternarize(w, axis=tuple(range(w.ndim - 1)), factor=factor)
     # STE: forward EXACTLY t (w + sg(t - w) is not value-exact in bf16 —
     # the rounding perturbs the CiM event counts), backward identity.
     w_t = t + (w - jax.lax.stop_gradient(w))
     return w_t, jax.lax.stop_gradient(scale)
 
 
-def _ternarize_act(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _ternarize_act(
+    x: jax.Array, factor: float = tern.TWN_THRESHOLD_FACTOR
+) -> Tuple[jax.Array, jax.Array]:
     """Per-tensor activation ternarization with STE; returns (x_t, scale)."""
-    t, scale = tern.ternarize(x)
+    t, scale = tern.ternarize(x, factor=factor)
     x_t = t + (x - jax.lax.stop_gradient(x))  # value-exact STE
     return x_t, jax.lax.stop_gradient(scale)
 
@@ -116,8 +160,15 @@ def dense(
     w: jax.Array,
     qc: QuantConfig,
     bias: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """The mode-switched linear layer. x: (..., K), w: (K, N)."""
+    """The mode-switched linear layer. x: (..., K), w: (K, N).
+
+    ``key`` feeds the stochastic sensing-error channel and is required
+    when the resolved spec has ``error_prob > 0`` (the model-assembly
+    code does not thread per-layer RNG, so noisy specs are for direct
+    dense()/api.execute callers — see serve.engine.apply_exec_spec).
+    """
     if qc.mode == "off":
         out = x @ w.astype(x.dtype)
     else:
@@ -131,42 +182,29 @@ def dense(
             w_t = w / jnp.maximum(sw, jnp.asarray(1e-12, w.dtype))
             sw = jax.lax.stop_gradient(sw)
         else:
-            w_t, sw = _ternarize_weight(w)
+            w_t, sw = _ternarize_weight(w, qc.threshold_factor)
         if qc.quantize_activations:
-            x_t, sx = _ternarize_act(x)
+            x_t, sx = _ternarize_act(x, qc.threshold_factor)
         else:
             x_t, sx = x, jnp.ones((), x.dtype)
-        if qc.mode == "ternary":
-            # cast straight back to the activation dtype: cross-shard
-            # partial-sum reductions (TP contractions) then move bf16, not
-            # f32 — halves the all-reduce payload (§Perf A4)
-            # bf16-out dot: the TP partial-sum all-reduce then moves bf16
-            # (XLA emits the reduction at the dot's output dtype; a cast
-            # after the dot does NOT narrow it — measured, §Perf A4)
-            out = jnp.einsum("...k,kn->...n", x_t.astype(x.dtype), w_t.astype(x.dtype))
-        elif qc.mode == "cim_fused":
-            # Pallas-kernel cost structure: p = x.w, m = |x|.|w|, combine.
-            # Equals the exact product numerically (clamp handled in-kernel
-            # on TPU: every 16-row block lives wholly inside one shard of a
-            # K-sharded contraction, so local clamping commutes with the
-            # cross-shard reduction); `minimum` with a large bound keeps
-            # XLA from folding the magnitude dot away. bf16 casts keep the
-            # TP all-reduces at half width. NOTE: XLA still reduces both p
-            # and m across shards, which the real kernel does not (it
-            # reduces one combined tensor) — the collective term for
-            # K-sharded cim layers is therefore an upper bound (<= 2x).
-            p = jnp.einsum("...k,kn->...n", x_t.astype(x.dtype), w_t.astype(x.dtype))
-            m = jnp.einsum(
-                "...k,kn->...n", jnp.abs(x_t).astype(x.dtype), jnp.abs(w_t).astype(x.dtype)
-            )
-            big = jnp.asarray(2.0**14, jnp.float32)
-            pf, mf = p.astype(jnp.float32), m.astype(jnp.float32)
-            out = jnp.minimum((mf + pf) * 0.5, big) - jnp.minimum((mf - pf) * 0.5, big)
-        else:  # cim
-            out = kops.cim_matmul(
-                x_t.astype(jnp.float32), w_t.astype(jnp.float32),
-                qc.block, qc.adc_max,
-            )
+        # One dispatch point for every ternary MAC: the spec (derived from
+        # the mode, or an explicit qc.exec_spec) picks the registered
+        # kernel; the shim owns padding, dtype policy, and the STE VJP.
+        #   ternary    -> exact/jnp: operand-dtype dot (the TP partial-sum
+        #                 all-reduce then moves bf16, not f32 — §Perf A4)
+        #   cim        -> blocked/auto: faithful per-16-block ADC clamp
+        #                 (Pallas kernel on TPU, jnp formulation on CPU)
+        #   cim_fused  -> fused/jnp: the kernel's HLO cost structure for
+        #                 dry-run/roofline work (numerically exact; on TPU
+        #                 the clamp happens inside the kernel's VMEM
+        #                 tiles, so no block intermediates reach HBM)
+        spec = qc.resolved_spec()
+        if spec.clamps:
+            out = exec_mac(spec, x_t.astype(jnp.float32), w_t.astype(jnp.float32),
+                           key=key)
+        else:
+            out = exec_mac(spec, x_t.astype(x.dtype), w_t.astype(x.dtype),
+                           key=key)
         # fold scales in the output dtype: an f32 round-trip here makes
         # every backward cotangent (and its all-reduce) f32 (§Perf A5)
         out = out.astype(x.dtype) * (sx * sw).astype(x.dtype)

@@ -11,6 +11,10 @@ CiM arrays once, not re-derived every inference).
 2-bit differential bitplane format (repro.core.ternary.pack_ternary),
 the storage layout of the SiTe cell (M1/M2) and of the packed Pallas
 kernel — 8x less HBM weight traffic than int8.
+
+``prepare_for_spec`` is the execution-API entry point: given the
+``CiMExecSpec`` the model will serve under, it performs whichever
+surgery that spec's packing requires.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ternary as tern
+from repro.core.execution import CiMExecSpec
 from repro.dist.sharding import tree_paths
 
 PyTree = Any
@@ -36,7 +41,9 @@ def _is_quantized_weight(path: str, leaf) -> bool:
     return bool(_QUANT_RE.search(path)) and leaf.ndim >= 2 and not _NO_QUANT_RE.search(path)
 
 
-def ternarize_params(params: PyTree) -> PyTree:
+def ternarize_params(
+    params: PyTree, factor: float = tern.TWN_THRESHOLD_FACTOR
+) -> PyTree:
     """Fold ternarization into the stored weights (scale * {-1,0,1})."""
     flat = tree_paths(params)
     leaves, treedef = jax.tree_util.tree_flatten(params)
@@ -47,14 +54,16 @@ def ternarize_params(params: PyTree) -> PyTree:
             # are (L, K, N) and dense() sees per-layer (K, N) slices, so
             # thresholds/scales must be per-(layer, out-channel)
             axis = (leaf.ndim - 2,)
-            t, scale = tern.ternarize(leaf, axis=axis)
+            t, scale = tern.ternarize(leaf, axis=axis, factor=factor)
             out.append((t * scale).astype(leaf.dtype))
         else:
             out.append(orig)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def pack_params(params: PyTree) -> Tuple[PyTree, Dict[str, jax.Array]]:
+def pack_params(
+    params: PyTree, factor: float = tern.TWN_THRESHOLD_FACTOR
+) -> Tuple[PyTree, Dict[str, jax.Array]]:
     """Ternarize and 2-bit-pack the quantizable weights.
 
     Returns (params_with_scales, packed) where ``packed`` maps each weight
@@ -71,10 +80,34 @@ def pack_params(params: PyTree) -> Tuple[PyTree, Dict[str, jax.Array]]:
         k_axis = leaf.ndim - 2
         if _is_quantized_weight(path, leaf) and leaf.shape[k_axis] % 8 == 0:
             axis = (k_axis,)
-            t, scale = tern.ternarize(leaf, axis=axis)
+            t, scale = tern.ternarize(leaf, axis=axis, factor=factor)
             p1, p2 = tern.pack_ternary(t.astype(jnp.int8), axis=k_axis)
             packed[path] = (p1, p2, scale)
             out.append((t * scale).astype(leaf.dtype))
         else:
             out.append(orig)
     return jax.tree_util.tree_unflatten(treedef, out), packed
+
+
+def prepare_for_spec(
+    params: PyTree,
+    spec: CiMExecSpec,
+    factor: float = tern.TWN_THRESHOLD_FACTOR,
+):
+    """Offline surgery matched to the serving execution spec.
+
+    packing="none"        -> ternarize + fold scales (pre_quantized path).
+    packing="bitplane_u8" -> additionally emit the packed (M1, M2)
+                             bitplanes per weight, the layout the packed
+                             kernels stream from HBM. Feed each
+                             ``packed[path] = (p1, p2, scale)`` entry to
+                             ``repro.api.execute_packed(spec, x, p1, p2)``
+                             (folding ``scale`` after the MAC) — that is
+                             the path that avoids per-call packing.
+
+    Returns ``params`` for "none", ``(params, packed)`` for bitplane
+    packing — mirroring :func:`ternarize_params` / :func:`pack_params`.
+    """
+    if spec.packing == "bitplane_u8":
+        return pack_params(params, factor=factor)
+    return ternarize_params(params, factor=factor)

@@ -12,15 +12,59 @@ examples/serve_ternary.py.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.execution import CiMExecSpec
 from repro.models import transformer as T
 
 PyTree = Any
+
+
+def apply_exec_spec(cfg: ArchConfig, spec: Optional[CiMExecSpec]) -> ArchConfig:
+    """Serve the model under an explicit CiM execution spec (e.g. a
+    packed-bitplane backend or flavor II) without touching the
+    architecture config: the spec overrides the QuantConfig's
+    mode-derived dispatch in every dense layer.
+
+    The stochastic sensing-error channel needs a per-layer PRNG key,
+    which the model-assembly code does not thread — noisy specs are for
+    direct ``api.execute`` / ``layers.dense(key=...)`` calls (see
+    benchmarks/bench_accuracy.py), so they are rejected here up front
+    rather than crashing inside the first forward.
+    """
+    if spec is None:
+        return cfg
+    if spec.error_prob > 0.0:
+        raise ValueError(
+            "serving does not thread PRNG keys into dense layers; use a "
+            "spec with error_prob=0 here and drive the sensing-error "
+            "channel through api.execute/layers.dense directly"
+        )
+    if spec.packing != "none":
+        # dense() holds dense weights, so a packed spec re-packs every
+        # weight inside every forward — functionally correct (this is
+        # the equivalence-test path) but it realizes none of the packed
+        # format's weight-traffic savings; that needs
+        # prepare_for_spec + api.execute_packed over stored planes
+        warnings.warn(
+            f"serving under packing={spec.packing!r} packs weights "
+            "per-forward (functional path only); use "
+            "quant.prepare.prepare_for_spec + api.execute_packed for "
+            "the stored-plane fast path",
+            stacklevel=2,
+        )
+    # mode="off" short-circuits dense() before the spec is consulted —
+    # upgrade it so the requested spec actually executes (ternarizing
+    # weights/activations on the fly, like any quantized mode)
+    mode = "cim" if cfg.quant.mode == "off" else cfg.quant.mode
+    return cfg.replace(
+        quant=dataclasses.replace(cfg.quant, mode=mode, exec_spec=spec)
+    )
 
 
 def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.0) -> jax.Array:
@@ -70,8 +114,10 @@ def generate(
     temperature: float = 0.0,
     key: Optional[jax.Array] = None,
     enc: Optional[jax.Array] = None,
+    exec_spec: Optional[CiMExecSpec] = None,
 ) -> jax.Array:
     """Greedy/temperature generation (host loop — example/test path)."""
+    cfg = apply_exec_spec(cfg, exec_spec)
     b, s0 = prompt.shape
     caches = T.init_caches(cfg, b, s_max)
     logits, caches = prefill(params, prompt, caches, cfg, enc)
@@ -110,9 +156,16 @@ class ContinuousBatcher:
     valid for heterogeneous progress.
     """
 
-    def __init__(self, params, cfg: ArchConfig, n_slots: int = 4, s_max: int = 128):
+    def __init__(
+        self,
+        params,
+        cfg: ArchConfig,
+        n_slots: int = 4,
+        s_max: int = 128,
+        exec_spec: Optional[CiMExecSpec] = None,
+    ):
         self.params = params
-        self.cfg = cfg
+        self.cfg = cfg = apply_exec_spec(cfg, exec_spec)
         self.n_slots = n_slots
         self.s_max = s_max
         self.caches = T.init_caches(cfg, n_slots, s_max)

@@ -1,0 +1,371 @@
+"""The declarative execution API (repro.api / repro.core.execution).
+
+The core contract: every registered (formulation, backend, packing)
+combination is bit-exact against the bitplane circuit oracle
+(``site_cim_matmul_bitplane``) on random ternary inputs — including K
+not divisible by 16 and batched leading dims — and the deprecated
+aliases forward into the same registry.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import site_cim as sc
+from repro.kernels import ops
+
+
+def rand_ternary(key, shape, p_zero=0.25, dtype=jnp.int32):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(dtype)
+
+
+# (leading dims, K, N): ragged K (not divisible by 16) and batched leads
+CASES = [
+    ((4,), 45, 7),
+    ((2, 3), 64, 16),
+    ((5,), 130, 9),
+]
+
+ALL_SPECS = list(api.registered_specs())
+
+
+def _oracle(spec, x, w):
+    """Bitplane circuit oracle. Non-clamping formulations compute the
+    exact product, which equals the oracle with the clamp never binding
+    (adc_max = block: a, b <= block)."""
+    adc_max = spec.adc_max if spec.clamps else spec.block
+    cfg = sc.SiTeCiMConfig(block=spec.block, adc_max=adc_max)
+    return sc.site_cim_matmul_bitplane(x, w, cfg)
+
+
+class TestEquivalenceSweep:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    @pytest.mark.parametrize("lead,k,n", CASES)
+    def test_bit_exact_vs_bitplane_oracle(self, spec, lead, k, n):
+        kx, kw = jax.random.split(jax.random.PRNGKey(k * 31 + n))
+        x = rand_ternary(kx, lead + (k,), p_zero=0.1)  # low sparsity: clamp binds
+        w = rand_ternary(kw, (k, n), p_zero=0.1)
+        out = api.execute(spec, x, w)
+        expect = _oracle(spec, x, w)
+        assert out.shape == lead + (n,)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_float_dtype_round_trip(self, spec):
+        kx, kw = jax.random.split(jax.random.PRNGKey(5))
+        x = rand_ternary(kx, (6, 48), dtype=jnp.float32)
+        w = rand_ternary(kw, (48, 10), dtype=jnp.float32)
+        out = api.execute(spec, x, w)
+        assert out.dtype == jnp.float32
+        expect = _oracle(spec, x.astype(jnp.int32), w.astype(jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect, np.float32))
+
+
+class TestSpecAndRegistry:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            api.CiMExecSpec(formulation="blokced")  # typo dies early
+        with pytest.raises(ValueError):
+            api.CiMExecSpec(backend="cuda")
+        with pytest.raises(ValueError):
+            api.CiMExecSpec(packing="int4")
+        with pytest.raises(ValueError):
+            api.CiMExecSpec(flavor="III")
+
+    def test_auto_backend_resolves(self):
+        spec = api.CiMExecSpec(formulation="blocked", backend="auto")
+        assert spec.resolve().backend in ("pallas", "jnp")
+
+    def test_unregistered_combination_raises(self):
+        spec = api.CiMExecSpec(formulation="bitplane", backend="pallas")
+        with pytest.raises(KeyError):
+            api.execute(spec, jnp.ones((1, 16)), jnp.ones((16, 1)))
+
+    def test_register_new_formulation_without_touching_call_sites(self):
+        """New kernels plug in as one registration; execute() dispatches."""
+
+        def negated(x2, w, spec):
+            return -jnp.einsum("mk,kn->mn", x2.astype(jnp.float32),
+                               w.astype(jnp.float32))
+
+        api.register_backend("negated/jnp/none", negated, clamps=False)
+        try:
+            spec = api.CiMExecSpec(formulation="negated", backend="jnp")
+            x = jnp.ones((2, 16), jnp.int32)
+            w = jnp.ones((16, 3), jnp.int32)
+            out = api.execute(spec, x, w)
+            np.testing.assert_array_equal(np.asarray(out), -16 * np.ones((2, 3)))
+        finally:
+            from repro.core import execution as xapi
+
+            del xapi._REGISTRY[("negated", "jnp", "none")]
+
+    def test_register_custom_backend_name(self):
+        """backend/packing are open sets too: registered names validate."""
+
+        def doubled(x2, w, spec):
+            return 2.0 * jnp.einsum("mk,kn->mn", x2.astype(jnp.float32),
+                                    w.astype(jnp.float32))
+
+        api.register_backend("exact/mxu2/none", doubled, clamps=False)
+        try:
+            spec = api.CiMExecSpec(formulation="exact", backend="mxu2")
+            out = api.execute(spec, jnp.ones((1, 16), jnp.int32),
+                              jnp.ones((16, 2), jnp.int32))
+            np.testing.assert_array_equal(np.asarray(out), [[32, 32]])
+        finally:
+            from repro.core import execution as xapi
+
+            del xapi._REGISTRY[("exact", "mxu2", "none")]
+
+    def test_error_prob_requires_key(self):
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp", error_prob=0.1)
+        with pytest.raises(ValueError):
+            api.execute(spec, jnp.ones((1, 16)), jnp.ones((16, 1)))
+
+    def test_sense_error_rejected_for_unclamped_formulations(self):
+        """The error channel models the ADC; exact/fused have none."""
+        spec = api.CiMExecSpec(formulation="exact", backend="jnp",
+                               error_prob=3.1e-3)
+        with pytest.raises(ValueError, match="ADC"):
+            api.execute(spec, jnp.ones((1, 16)), jnp.ones((16, 1)),
+                        key=jax.random.PRNGKey(0))
+
+    def test_serving_rejects_noisy_spec_up_front(self):
+        from repro.models.registry import get_config
+        from repro.serve.engine import apply_exec_spec
+
+        cfg = get_config("smollm-135m", smoke=True)
+        clean = api.CiMExecSpec(formulation="blocked", backend="jnp")
+        assert apply_exec_spec(cfg, clean).quant.exec_spec is clean
+        noisy = dataclasses.replace(clean, error_prob=3.1e-3)
+        with pytest.raises(ValueError):
+            apply_exec_spec(cfg, noisy)
+
+    def test_serving_spec_overrides_fp_mode(self):
+        """mode="off" short-circuits dense(); apply_exec_spec must
+        upgrade the mode so the requested spec actually executes."""
+        from repro.models.layers import QuantConfig
+        from repro.models.registry import get_config
+        from repro.serve.engine import apply_exec_spec
+
+        cfg = get_config("smollm-135m", smoke=True).replace(
+            quant=QuantConfig(mode="off"))
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp")
+        out = apply_exec_spec(cfg, spec)
+        assert out.quant.mode != "off"
+        assert out.quant.exec_spec is spec
+
+    def test_dense_threads_sense_error_key(self):
+        from repro.models.layers import QuantConfig, dense
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+        w = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               error_prob=3.1e-3)
+        qc = QuantConfig(mode="cim", exec_spec=spec)
+        with pytest.raises(ValueError):
+            dense(x, w, qc)  # no key
+        noisy = dense(x, w, qc, key=jax.random.PRNGKey(2))
+        clean = dense(x, w, QuantConfig(mode="cim"))
+        assert noisy.shape == clean.shape
+        assert bool(jnp.any(noisy != clean))  # the channel actually fired
+
+    def test_sense_error_channel_statistics(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(9))
+        x = rand_ternary(kx, (64, 256))
+        w = rand_ternary(kw, (256, 64))
+        clean_spec = api.CiMExecSpec(formulation="blocked", backend="jnp")
+        noisy_spec = dataclasses.replace(clean_spec, error_prob=3.1e-3)
+        clean = np.asarray(api.execute(clean_spec, x, w))
+        noisy = np.asarray(api.execute(noisy_spec, x, w, key=jax.random.PRNGKey(10)))
+        rate = (clean != noisy).mean()
+        assert 0.2 * 16 * 3.1e-3 < rate < 5 * 16 * 3.1e-3
+        assert np.abs(clean - noisy).max() <= 4
+
+    def test_ste_gradients_are_exact_matmul(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(11))
+        x = rand_ternary(kx, (8, 64), dtype=jnp.float32)
+        w = rand_ternary(kw, (64, 16), dtype=jnp.float32)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp")
+        gx, gw = jax.grad(lambda a, b: api.execute(spec, a, b).sum(),
+                          argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx),
+                                   np.asarray(jnp.ones((8, 16)) @ w.T), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gw),
+                                   np.asarray(x.T @ jnp.ones((8, 16))), rtol=1e-5)
+
+
+class TestExecutePacked:
+    """Pre-packed plane fast path: consumes quant.prepare's storage
+    format directly, no per-call pack."""
+
+    def _data(self, k=96, n=8):
+        kx, kw = jax.random.split(jax.random.PRNGKey(31))
+        x = rand_ternary(kx, (2, 3, k), p_zero=0.1)
+        t = rand_ternary(kw, (k, n), p_zero=0.1, dtype=jnp.int8)
+        from repro.core.ternary import pack_ternary
+
+        p1, p2 = pack_ternary(t, axis=0)
+        return x, t.astype(jnp.int32), p1, p2
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("formulation", ["blocked", "exact"])
+    def test_matches_dense_weight_path(self, backend, formulation):
+        x, t, p1, p2 = self._data()
+        spec = api.CiMExecSpec(formulation=formulation, backend=backend,
+                               packing="bitplane_u8")
+        out = api.execute_packed(spec, x, p1, p2)
+        expect = api.execute(spec, x, t)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_validation(self):
+        x, t, p1, p2 = self._data()
+        with pytest.raises(ValueError, match="bitplane_u8"):
+            api.execute_packed(
+                api.CiMExecSpec(formulation="blocked", backend="jnp"), x, p1, p2)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               packing="bitplane_u8")
+        with pytest.raises(ValueError, match="mismatch"):
+            api.execute_packed(spec, x[..., :88], p1, p2)
+        with pytest.raises(ValueError):
+            api.execute_packed(
+                dataclasses.replace(spec, formulation="bitplane"), x, p1, p2)
+
+    def test_sense_channel(self):
+        x, t, p1, p2 = self._data(k=256, n=64)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               packing="bitplane_u8", error_prob=3.1e-3)
+        with pytest.raises(ValueError):
+            api.execute_packed(spec, x, p1, p2)  # no key
+        noisy = api.execute_packed(spec, x, p1, p2, key=jax.random.PRNGKey(1))
+        clean = api.execute_packed(dataclasses.replace(spec, error_prob=0.0),
+                                   x, p1, p2)
+        assert bool(jnp.any(noisy != clean))
+
+
+class TestDeprecatedAliases:
+    """Every legacy entry point forwards to the registry."""
+
+    def setup_method(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(21))
+        self.x = rand_ternary(kx, (4, 96), p_zero=0.1)
+        self.w = rand_ternary(kw, (96, 8), p_zero=0.1)
+
+    def test_site_cim_matmul(self):
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp")
+        np.testing.assert_array_equal(
+            np.asarray(sc.site_cim_matmul(self.x, self.w)),
+            np.asarray(api.execute(spec, self.x, self.w)),
+        )
+
+    def test_site_cim_matmul_corrected(self):
+        spec = api.CiMExecSpec(formulation="corrected", backend="jnp")
+        np.testing.assert_array_equal(
+            np.asarray(sc.site_cim_matmul_corrected(self.x, self.w)),
+            np.asarray(api.execute(spec, self.x, self.w)),
+        )
+
+    def test_nm_ternary_matmul(self):
+        np.testing.assert_array_equal(
+            np.asarray(sc.nm_ternary_matmul(self.x, self.w)),
+            np.asarray(self.x @ self.w),
+        )
+
+    def test_ops_cim_matmul(self):
+        x = self.x.astype(jnp.float32)
+        w = self.w.astype(jnp.float32)
+        spec = api.CiMExecSpec(formulation="blocked", backend="auto")
+        np.testing.assert_array_equal(
+            np.asarray(ops.cim_matmul(x, w)),
+            np.asarray(api.execute(spec, x, w)),
+        )
+
+    def test_ops_exact_ternary_matmul(self):
+        x = self.x.astype(jnp.float32)
+        w = self.w.astype(jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.exact_ternary_matmul(x, w, backend="jnp")),
+            np.asarray(x @ w),
+        )
+
+    def test_alias_nondefault_config_forwards(self):
+        cfg = sc.SiTeCiMConfig(block=32, adc_max=4)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               block=32, adc_max=4)
+        np.testing.assert_array_equal(
+            np.asarray(sc.site_cim_matmul(self.x, self.w, cfg)),
+            np.asarray(api.execute(spec, self.x, self.w)),
+        )
+
+
+class TestQuantConfigSpec:
+    def test_mode_off_has_no_spec(self):
+        from repro.models.layers import QuantConfig
+
+        with pytest.raises(ValueError):
+            QuantConfig(mode="off").resolved_spec()
+        # a spec on an fp config would silently never execute — rejected
+        with pytest.raises(ValueError):
+            QuantConfig(mode="off",
+                        exec_spec=api.CiMExecSpec(formulation="blocked"))
+
+    def test_ste_backward_keeps_operand_dtype_for_exact(self):
+        """§Perf A4: exact/fused backward dots stay at activation width
+        so TP all-reduce payloads don't double; clamped backward is f32."""
+        x = jnp.ones((4, 32), jnp.bfloat16)
+        w = jnp.ones((32, 3), jnp.bfloat16)
+
+        def dots_in_bwd(formulation):
+            spec = api.CiMExecSpec(formulation=formulation, backend="jnp")
+            jaxpr = jax.make_jaxpr(
+                jax.grad(lambda a, b: api.execute(spec, a, b).astype(jnp.float32).sum(),
+                         argnums=(0, 1))
+            )(x, w)
+            return str(jaxpr)
+
+        assert "f32[4,32]" not in dots_in_bwd("exact")      # dx stays bf16
+        assert "f32[4,32]" in dots_in_bwd("blocked")        # STE accum f32
+
+    def test_mode_ladder_resolves_to_specs(self):
+        from repro.models.layers import QuantConfig
+
+        assert QuantConfig(mode="ternary").resolved_spec().formulation == "exact"
+        assert QuantConfig(mode="cim").resolved_spec().formulation == "blocked"
+        assert QuantConfig(mode="cim", corrected=True).resolved_spec().formulation == "corrected"
+        assert QuantConfig(mode="cim_fused").resolved_spec().formulation == "fused"
+        qc = QuantConfig(mode="cim", block=32, adc_max=16)
+        spec = qc.resolved_spec()
+        assert (spec.block, spec.adc_max) == (32, 16)
+
+    def test_explicit_spec_overrides_mode(self):
+        from repro.models.layers import QuantConfig
+
+        spec = api.CiMExecSpec(formulation="bitplane", backend="jnp")
+        qc = QuantConfig(mode="cim", exec_spec=spec)
+        assert qc.resolved_spec() is spec
+
+    def test_dense_routes_through_api(self):
+        """dense() under mode="cim" must produce clamped (not exact) MACs."""
+        from repro.models.layers import QuantConfig, dense
+
+        x = jnp.ones((1, 32), jnp.float32)          # dense +1s: clamp binds
+        w = jnp.ones((32, 1), jnp.float32)
+        qc = QuantConfig(mode="cim", quantize_activations=False)
+        out = dense(x, w, qc)
+        # ternarized w == w; per-block clamp: 2 blocks * 8 = 16 (not 32)
+        assert float(out[0, 0]) == pytest.approx(16.0)
+
+    def test_spec_cost_model_mapping(self):
+        assert api.spec_design(api.CiMExecSpec(formulation="exact")) == "NM"
+        assert api.spec_design(api.CiMExecSpec(formulation="blocked", flavor="I")) == "CiM-I"
+        assert api.spec_design(api.CiMExecSpec(formulation="blocked", flavor="II")) == "CiM-II"
+        cost = api.spec_cost_summary(api.CiMExecSpec(formulation="blocked"), "8T-SRAM")
+        assert cost["design"] == "CiM-I"
+        assert cost["mac_pass_ns"] > 0

@@ -76,7 +76,7 @@ class TestActivationSharding:
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         shd.enable_activation_sharding(multi_pod=False, batch_divisor=16)
         try:
-            with jax.set_mesh(mesh):
+            with shd.use_mesh(mesh):
                 x = jnp.ones((1, 8, 16))  # batch 1 not divisible: no crash
                 y = shd.shard_act(x, "btd")
                 assert y.shape == x.shape

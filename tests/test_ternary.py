@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # minimal installs: suite still collects
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ternary as tern
 
