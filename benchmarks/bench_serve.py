@@ -1,0 +1,144 @@
+"""Serving benchmark: fused ragged-position decode vs the per-slot-loop
+baseline, over one continuous-batching workload.
+
+The paper's system-level claim (§IV: up to 7X throughput) rests on
+keeping the CiM arrays busy with *batched* dot products; TiM-DNN
+likewise amortizes array activations across a full batch. The serving
+metric that tracks this is how much model work one decode step feeds the
+arrays: the fused batcher runs one batched ``decode_step`` over all
+slots at heterogeneous cache positions, the legacy baseline de-batches
+into a static per-slot loop of single-row steps.
+
+Reported per mode:
+  * ``tok_s``                — end-to-end generated tokens / wall second
+  * ``decode_steps``         — jitted decode dispatches for the workload
+  * ``host_syncs``           — device->host fetches (fused: 1 per step)
+  * ``host_syncs_per_token`` — serving-loop chattiness
+  * ``compile_s``            — time to build + compile the step functions
+
+The looped baseline is the pre-ragged-decode engine verbatim: its
+per-slot prefill runs eagerly (never jitted) and recompiles nothing but
+pays op-by-op dispatch for every request, and every active slot costs
+one host sync per step — both counted against it here, because both are
+what the fused path removes.
+
+Emits ``BENCH_serve.json`` (CI uploads it as a workflow artifact; the
+bench-smoke job fails if the file is missing or malformed).
+
+Runs the smoke config by default (matching the ``benchmarks.run``
+harness, and CPU-feasible); ``--full`` opts into the full arch config.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_serve [--full] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serve.engine import ContinuousBatcher, Request
+
+
+def _workload(cfg, n_requests: int, max_new: int):
+    """Deterministic ragged request mix (prompt lengths 1-4, ragged max_new)."""
+    return [
+        Request(
+            i,
+            [1 + (i * 7 + j) % (cfg.vocab - 1) for j in range(1 + i % 4)],
+            max_new=2 + i % max_new,
+        )
+        for i in range(n_requests)
+    ]
+
+
+def _run_mode(params, cfg, fused: bool, n_slots: int, s_max: int,
+              n_requests: int, max_new: int):
+    t0 = time.perf_counter()
+    batcher = ContinuousBatcher(params, cfg, n_slots=n_slots, s_max=s_max,
+                                fused=fused)
+    # warm with the full workload once so the measured pass is steady-state
+    # for BOTH modes (the looped baseline recompiles prefill per distinct
+    # prompt length — charged to compile_s here, not to tok_s)
+    for r in _workload(cfg, n_requests, max_new):
+        batcher.submit(r)
+    batcher.run()
+    compile_s = time.perf_counter() - t0
+
+    batcher.decode_steps = batcher.host_syncs = 0
+    reqs = _workload(cfg, n_requests, max_new)
+    for r in reqs:
+        batcher.submit(r)
+    t0 = time.perf_counter()
+    batcher.run()
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    tokens = sum(len(r.generated) for r in reqs)
+    return {
+        "mode": "fused" if fused else "looped",
+        "tokens": tokens,
+        "wall_s": round(wall, 4),
+        "tok_s": round(tokens / max(wall, 1e-9), 2),
+        "decode_steps": batcher.decode_steps,
+        "host_syncs": batcher.host_syncs,
+        "host_syncs_per_token": round(batcher.host_syncs / max(tokens, 1), 3),
+        "compile_s": round(compile_s, 4),
+    }
+
+
+def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
+        s_max: int = 64, n_requests: int = 8, max_new: int = 6,
+        out: str = "BENCH_serve.json"):
+    cfg = get_config(arch, smoke=smoke)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    fused = _run_mode(params, cfg, True, n_slots, s_max, n_requests, max_new)
+    looped = _run_mode(params, cfg, False, n_slots, s_max, n_requests, max_new)
+    result = {
+        "bench": "serve",
+        "arch": arch,
+        "smoke": smoke,
+        "n_slots": n_slots,
+        "s_max": s_max,
+        "n_requests": n_requests,
+        "backend": jax.default_backend(),
+        "fused": fused,
+        "looped": looped,
+        "speedup_fused_over_looped": round(
+            fused["tok_s"] / max(looped["tok_s"], 1e-9), 2),
+        "host_sync_reduction": round(
+            looped["host_syncs"] / max(fused["host_syncs"], 1), 2),
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"[bench_serve] wrote {out}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--smoke", dest="smoke", action="store_true",
+                      help="use the smoke config (the default; kept explicit "
+                           "for CI invocations)")
+    size.add_argument("--full", dest="smoke", action="store_false",
+                      help="benchmark the full arch config instead of smoke")
+    ap.set_defaults(smoke=True)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, arch=args.arch, n_slots=args.slots, s_max=args.s_max,
+        n_requests=args.requests, max_new=args.max_new, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,8 @@
   bench_ablation — N_A / ADC-precision design-point sweep (Sections III.2, IV.4)
   bench_kernels  — kernel micro-bench (CPU wall time + cost profile)
   bench_roofline — §Roofline table from the dry-run artifacts
+  bench_serve    — serving throughput: fused ragged-position decode vs
+                   the per-slot-loop baseline (emits BENCH_serve.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <name>]
 """
@@ -26,6 +28,7 @@ def main() -> None:
         bench_array,
         bench_kernels,
         bench_roofline,
+        bench_serve,
         bench_system,
     )
 
@@ -36,6 +39,7 @@ def main() -> None:
         "ablation": bench_ablation,
         "kernels": bench_kernels,
         "roofline": bench_roofline,
+        "serve": bench_serve,
     }
     names = [args.only] if args.only else list(suites)
     for name in names:

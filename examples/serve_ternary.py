@@ -2,7 +2,10 @@
 
 Spins up the slot-pool batcher, submits a stream of requests with
 different lengths, and decodes them concurrently — finished slots refill
-from the queue without stalling the others.
+from the queue without stalling the others. Every decode step is ONE
+fused, jitted call over all slots at their own cache positions (the
+ragged-position decode contract, DESIGN.md §6), with sampling on device
+and a single host fetch per step.
 
 Run: PYTHONPATH=src python examples/serve_ternary.py
 """
@@ -25,14 +28,13 @@ def main():
         batcher.submit(r)
 
     t0 = time.perf_counter()
-    steps = 0
-    while batcher.queue or any(s is not None for s in batcher.slot_req):
-        batcher.step()
-        steps += 1
+    batcher.run()
     dt = time.perf_counter() - t0
     total_toks = sum(len(r.generated) for r in reqs)
-    print(f"served {len(reqs)} requests / {total_toks} tokens "
-          f"in {steps} fused decode steps ({dt:.2f}s)")
+    stats = batcher.stats()
+    print(f"served {len(reqs)} requests / {total_toks} tokens in "
+          f"{stats['decode_steps']} fused decode steps, "
+          f"{stats['host_syncs']} host syncs ({dt:.2f}s)")
     for r in reqs:
         assert r.done
         print(f"  req {r.rid}: prompt {r.prompt} -> {r.generated}")

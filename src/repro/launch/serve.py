@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 8 --slots 4
+
+The serving CiM execution spec is selected with ``--exec-spec`` as
+``formulation[/backend[/packing[/flavor]]]``, e.g. ``exact/jnp`` (the
+near-memory exact baseline), ``blocked`` (faithful per-16-block ADC
+clamp), or ``bitplane/jnp/bitplane_u8/II`` (2-bit packed planes, flavor
+II); combined with ``--prepare-weights`` the quantization is folded
+offline once (quant.prepare.prepare_for_spec) and packed planes are
+prepared up front instead of per step.
 """
 from __future__ import annotations
 
@@ -10,10 +18,20 @@ import time
 
 import jax
 
+from repro.core.execution import CiMExecSpec
 from repro.models import transformer as T
 from repro.models.registry import get_config
 from repro.quant.prepare import ternarize_params
 from repro.serve.engine import ContinuousBatcher, Request
+
+
+def parse_exec_spec(text: str) -> CiMExecSpec:
+    """``formulation[/backend[/packing[/flavor]]]`` -> CiMExecSpec."""
+    parts = text.split("/")
+    if len(parts) > 4:
+        raise ValueError(f"bad exec spec {text!r} (at most 4 '/'-fields)")
+    fields = ("formulation", "backend", "packing", "flavor")
+    return CiMExecSpec(**dict(zip(fields, parts)))
 
 
 def main(argv=None):
@@ -24,6 +42,19 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--s-max", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--exec-spec", default=None, metavar="FORM[/BACKEND[/PACKING[/FLAVOR]]]",
+                    help="serve under an explicit CiM execution spec, e.g. "
+                         "'exact/jnp', 'blocked', 'bitplane/jnp/bitplane_u8/II'")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy), applied on device")
+    ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
+    ap.add_argument("--loop-decode", action="store_true",
+                    help="use the legacy per-slot-loop decode baseline "
+                         "instead of the fused ragged-position step")
+    ap.add_argument("--prepare-weights", action="store_true",
+                    help="run quant.prepare.prepare_for_spec once at startup "
+                         "(requires --exec-spec): folded ternary weights, and "
+                         "pre-packed planes for bitplane_u8 packing")
     ap.add_argument("--pre-quantize", action="store_true",
                     help="fold ternarization into weights offline")
     args = ap.parse_args(argv)
@@ -35,7 +66,14 @@ def main(argv=None):
 
         params = ternarize_params(params)
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, pre_quantized=True))
-    batcher = ContinuousBatcher(params, cfg, n_slots=args.slots, s_max=args.s_max)
+    exec_spec = parse_exec_spec(args.exec_spec) if args.exec_spec else None
+    if args.prepare_weights and exec_spec is None:
+        ap.error("--prepare-weights requires --exec-spec")
+    batcher = ContinuousBatcher(
+        params, cfg, n_slots=args.slots, s_max=args.s_max,
+        exec_spec=exec_spec, temperature=args.temperature, seed=args.seed,
+        fused=not args.loop_decode, prepare_weights=args.prepare_weights,
+    )
     reqs = [
         Request(i, [1 + (i * 7 + j) % (cfg.vocab - 1) for j in range(1 + i % 4)],
                 max_new=2 + i % args.max_new)
@@ -47,8 +85,12 @@ def main(argv=None):
     batcher.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in reqs)
+    stats = batcher.stats()
     print(f"[serve] {len(reqs)} requests, {toks} tokens, {dt:.2f}s "
-          f"({toks / max(dt, 1e-9):.1f} tok/s functional-CPU)")
+          f"({toks / max(dt, 1e-9):.1f} tok/s functional-CPU), "
+          f"{stats['decode_steps']} decode steps, "
+          f"{stats['host_syncs']} host syncs "
+          f"({'looped' if args.loop_decode else 'fused'} decode)")
     assert all(r.done for r in reqs)
     return 0
 

@@ -42,6 +42,39 @@ class MLACache(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
+# Ragged cache writes
+# ---------------------------------------------------------------------------
+
+def write_cache_rows(buf: jax.Array, new: jax.Array, index: jax.Array) -> jax.Array:
+    """Write ``new`` (B, s, ...) into ``buf`` (B, S_max, ...) at sequence
+    offset ``index``.
+
+    ``index`` is the ragged-decode contract's pivot (DESIGN.md §6): a
+    scalar means every row writes at the same offset (prefill /
+    ``generate()``) and lowers to one contiguous dynamic_update_slice; a
+    ``(B,)`` vector means each row lands at its own offset (continuous
+    batching over slots at heterogeneous progress) and lowers to a
+    vmapped per-row dynamic_update_slice (a batched scatter — rows not
+    addressed by their own offset are untouched).
+    """
+    new = new.astype(buf.dtype)
+    if jnp.ndim(index) == 0:
+        starts = (0, index) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new, starts)
+
+    def row(buf_row, new_row, i):
+        starts = (i,) + (0,) * (buf_row.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf_row, new_row, starts)
+
+    return jax.vmap(row)(buf, new, index)
+
+
+def _index_vector(index, b: int) -> jax.Array:
+    """Normalize a scalar-or-(B,) cache index to a (B,) int32 vector."""
+    return jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+
+
+# ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------
 
@@ -57,11 +90,23 @@ def init_gqa(key, cfg: ArchConfig, dtype=jnp.float32):
     }
 
 
-def _sdpa(q, k, v, causal_offset: Optional[int], length: Optional[jax.Array] = None):
+def _sdpa(
+    q,
+    k,
+    v,
+    causal_offset,
+    length: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
+):
     """q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dh). GQA via head grouping.
 
     causal_offset: position of q[0] relative to k[0] (None = no mask).
-    length: valid KV length for decode (mask out beyond).
+      Scalar, or (B,) for ragged decode where each row sits at its own
+      cache position.
+    length: (B,) valid KV length for decode (mask out at and beyond).
+    start: (B,) first valid KV slot (mask out below) — left-padded
+      batched prefill leaves dead pad slots at the front of each row's
+      cache region; they stay masked for the slot's lifetime.
     """
     b, sq, h, dh = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -83,13 +128,18 @@ def _sdpa(q, k, v, causal_offset: Optional[int], length: Optional[jax.Array] = N
     scores = L.accum_einsum("bqhgd,bkhd->bhgqk", qg, k.astype(qg.dtype))
     scores = scores / jnp.sqrt(dh).astype(jnp.float32)
     if causal_offset is not None:
-        qpos = jnp.arange(sq)[:, None] + causal_offset
-        kpos = jnp.arange(sk)[None, :]
-        mask = kpos <= qpos
-        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        off = jnp.asarray(causal_offset, jnp.int32)
+        off = off[None] if off.ndim == 0 else off        # (1,) or (B,)
+        qpos = off[:, None, None] + jnp.arange(sq, dtype=jnp.int32)[None, :, None]
+        kpos = jnp.arange(sk, dtype=jnp.int32)[None, None, :]
+        mask = kpos <= qpos                              # (1|B, sq, sk)
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
     if length is not None:
         valid = jnp.arange(sk)[None, :] < length[:, None]
         scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    if start is not None:
+        live = jnp.arange(sk)[None, :] >= start[:, None]
+        scores = jnp.where(live[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
     return out.reshape(b, sq, h, dh)
@@ -144,9 +194,13 @@ def gqa_attention(
     positions: jax.Array,
     cache: Optional[KVCache] = None,
     cache_index: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     """x: (B, S, D). With a cache: decode/prefill-append mode — new KV
-    written at ``cache_index``; attention runs against the whole cache."""
+    written at ``cache_index`` (scalar, or (B,) for ragged decode where
+    every row writes at its own position); attention runs against the
+    whole cache. ``start`` marks each row's first valid cache slot
+    (left-padding dead zone — see DESIGN.md §6)."""
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     qc = cfg.quant
@@ -163,15 +217,17 @@ def gqa_attention(
             out = _sdpa(q, k, v, causal_offset=0)
         new_cache = None
     else:
-        k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, cache_index, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, cache_index, 0, 0))
+        k_all = write_cache_rows(cache.k, k, cache_index)
+        v_all = write_cache_rows(cache.v, v, cache_index)
         # Return only the new-token KV: the caller owns the stacked cache
         # and writes just this slice (avoids restacking the full per-layer
         # cache through the layer scan — decode HBM traffic stays
         # O(read cache + write one token), see DESIGN.md).
         new_cache = KVCache(k.astype(cache.k.dtype), v.astype(cache.v.dtype))
-        length = jnp.full((b,), cache_index + s, jnp.int32)
-        out = _sdpa(q, k_all, v_all, causal_offset=cache_index, length=length)
+        length = _index_vector(cache_index, b) + s
+        out = _sdpa(
+            q, k_all, v_all, causal_offset=cache_index, length=length, start=start
+        )
     out = out.reshape(b, s, h * hd)
     return L.dense(out, params["wo"], qc), new_cache
 
@@ -206,6 +262,7 @@ def mla_attention(
     positions: jax.Array,
     cache: Optional[MLACache] = None,
     cache_index: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[MLACache]]:
     b, s, d = x.shape
     h = cfg.n_heads
@@ -223,17 +280,16 @@ def mla_attention(
     k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
-        ckv_all = jax.lax.dynamic_update_slice(
-            cache.ckv, ckv.astype(cache.ckv.dtype), (0, cache_index, 0))
-        krope_all = jax.lax.dynamic_update_slice(
-            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, cache_index, 0))
+        ckv_all = write_cache_rows(cache.ckv, ckv, cache_index)
+        krope_all = write_cache_rows(cache.k_rope, k_rope, cache_index)
         # new-token slices only; caller writes them into the stacked cache
         new_cache = MLACache(ckv.astype(cache.ckv.dtype), k_rope.astype(cache.k_rope.dtype))
         offset = cache_index
         sk = ckv_all.shape[1]
-        length = jnp.full((b,), cache_index + s, jnp.int32)
+        length = _index_vector(cache_index, b) + s
     else:
         ckv_all, krope_all, new_cache, offset, sk, length = ckv, k_rope, None, 0, s, None
+        start = None
 
     # Absorbed-weight form: score = q_nope^T W_uk ckv + q_rope^T k_rope.
     # (decode-efficient: cache stays compressed; W_uk is absorbed into q.)
@@ -245,12 +301,17 @@ def mla_attention(
     scores = scores + L.accum_einsum(
         "bqhd,bkd->bhqk", q_rope, krope_all.astype(q_rope.dtype))
     scores = scores / jnp.sqrt(dn + dr).astype(jnp.float32)
-    qpos = jnp.arange(s)[:, None] + offset
-    kpos = jnp.arange(sk)[None, :]
-    scores = jnp.where((kpos <= qpos)[None, None], scores, -1e30)
+    off = jnp.asarray(offset, jnp.int32)
+    off = off[None] if off.ndim == 0 else off            # (1,) or (B,)
+    qpos = off[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    kpos = jnp.arange(sk, dtype=jnp.int32)[None, None, :]
+    scores = jnp.where((kpos <= qpos[:, :, None])[:, None], scores, -1e30)
     if length is not None:
         valid = jnp.arange(sk)[None, :] < length[:, None]
         scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    if start is not None:
+        live = jnp.arange(sk)[None, :] >= start[:, None]
+        scores = jnp.where(live[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
 
     # values from the latent: v = ckv W_uv, attended in latent space first.

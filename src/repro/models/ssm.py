@@ -139,9 +139,18 @@ def mamba2_block(
     x: jax.Array,
     cfg: ArchConfig,
     cache: Optional[SSMCache] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[SSMCache]]:
     """x: (B, S, D). Without cache: chunked parallel form (training /
-    prefill). With cache: S must be 1 (decode step)."""
+    prefill). With cache: any S ≥ 1 — S = 1 is the O(1) decode step,
+    S > 1 is cached prefill (conv window seeded from the cache, state
+    recurrence continued from ``cache.state``).
+
+    ``valid`` (B, S) marks real columns in a left-padded batched prefill:
+    pad columns contribute nothing — their raw conv inputs are zeroed
+    (matching the zero-initialized conv window of an unpadded run) and
+    their dt is zeroed, which freezes the state (exp(0·A) = 1, no B·x
+    injection)."""
     b, s, d = x.shape
     di = cfg.ssm_d_inner
     g, n = cfg.ssm_n_groups, cfg.ssm_state
@@ -171,27 +180,46 @@ def mamba2_block(
         y, h_final = _ssd_chunked(xs, dt, A, B_, C_, params["D"], chunk)
         y = y[:, :s]
         new_cache = None
-        if cache is not None:
-            new_cache = cache._replace(state=h_final)
     else:
-        # decode: roll conv window, single recurrent update
-        conv_in = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, W, C)
+        # decode / cached prefill: the last W-1 *raw* conv inputs ride in
+        # cache.conv; run the depthwise causal conv over the extended
+        # window and continue the state recurrence from cache.state with
+        # a sequential scan over the S new tokens (S = 1: one recurrent
+        # update, the O(1) decode step).
+        if valid is not None:
+            keep = valid[:, :, None]
+            xbc = jnp.where(keep, xbc, jnp.zeros((), xbc.dtype))
+            dt = jnp.where(valid[:, :, None], dt, 0.0)
+        conv_in = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, W-1+S, C)
         w = params["conv_w"]
-        xbc1 = jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"]
-        xbc1 = jax.nn.silu(xbc1)[:, None, :]                  # (B, 1, C)
-        xs = xbc1[..., :di].reshape(b, 1, h, p).astype(jnp.float32)
-        B_ = xbc1[..., di : di + g * n].reshape(b, 1, g, n).astype(jnp.float32)
-        C_ = xbc1[..., di + g * n :].reshape(b, 1, g, n).astype(jnp.float32)
+        width = w.shape[0]
+        conv_out = sum(
+            conv_in[:, i : i + s, :] * w[i][None, None, :] for i in range(width)
+        )
+        xbc_f = jax.nn.silu(conv_out + params["conv_b"][None, None, :])
+        xs = xbc_f[..., :di].reshape(b, s, h, p).astype(jnp.float32)
+        B_ = xbc_f[..., di : di + g * n].reshape(b, s, g, n).astype(jnp.float32)
+        C_ = xbc_f[..., di + g * n :].reshape(b, s, g, n).astype(jnp.float32)
         hp = h // g
-        Bh = jnp.repeat(B_, hp, axis=2)[:, 0]                 # (b, h, n)
-        Ch = jnp.repeat(C_, hp, axis=2)[:, 0]
-        dt0 = dt[:, 0]                                        # (b, h)
-        dA = jnp.exp(dt0 * A[None, :])                        # (b, h)
-        state = cache.state * dA[:, :, None, None] + jnp.einsum(
-            "bh,bhn,bhp->bhpn", dt0, Bh, xs[:, 0])
-        y = jnp.einsum("bhn,bhpn->bhp", Ch, state)[:, None]   # (b, 1, h, p)
+        Bh = jnp.repeat(B_, hp, axis=2)                       # (b, s, h, n)
+        Ch = jnp.repeat(C_, hp, axis=2)
+        dA = jnp.exp(dt * A[None, None, :])                   # (b, s, h)
+
+        def step(state, inp):
+            x_t, B_t, C_t, dt_t, dA_t = inp
+            state = state * dA_t[:, :, None, None] + jnp.einsum(
+                "bh,bhn,bhp->bhpn", dt_t, B_t, x_t)
+            y_t = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+            return state, y_t
+
+        to_time = lambda a: jnp.moveaxis(a, 1, 0)
+        state, ys = jax.lax.scan(
+            step, cache.state,
+            (to_time(xs), to_time(Bh), to_time(Ch), to_time(dt), to_time(dA)),
+        )
+        y = jnp.moveaxis(ys, 0, 1)                            # (b, s, h, p)
         y = y + xs * params["D"][None, None, :, None]
-        new_cache = SSMCache(conv=conv_in[:, 1:], state=state)
+        new_cache = SSMCache(conv=conv_in[:, s:], state=state)
 
     y = y.reshape(b, s, di).astype(x.dtype)
     y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])

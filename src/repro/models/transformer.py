@@ -64,18 +64,27 @@ def apply_block(
     cache: Optional[PyTree],
     cache_index,
     enc: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ):
-    """Returns (x, new_cache)."""
+    """Returns (x, new_cache). ``cache_index`` is scalar or (B,) (ragged
+    decode); ``start`` is the (B,) left-padding dead-zone boundary —
+    attention masks cache slots below it, SSM blocks zero the padded
+    columns' state/conv contributions (pad columns have positions < 0)."""
     if "mamba" in p:
         h = L.rms_norm(x, p["ln1"])
-        out, new_cache = ssm_lib.mamba2_block(p["mamba"], h, cfg, cache)
+        valid = None
+        if cache is not None and start is not None:
+            valid = positions >= 0  # (B, S): left-pad columns are inert
+        out, new_cache = ssm_lib.mamba2_block(p["mamba"], h, cfg, cache, valid=valid)
         return x + out, new_cache
 
     h = L.rms_norm(x, p["ln1"])
     if cfg.mla:
-        a, new_cache = attn.mla_attention(p["attn"], h, cfg, positions, cache, cache_index)
+        a, new_cache = attn.mla_attention(
+            p["attn"], h, cfg, positions, cache, cache_index, start)
     else:
-        a, new_cache = attn.gqa_attention(p["attn"], h, cfg, positions, cache, cache_index)
+        a, new_cache = attn.gqa_attention(
+            p["attn"], h, cfg, positions, cache, cache_index, start)
     x = x + a
     x = shard_act(x, "btd")
     if enc is not None and "cross" in p:
@@ -165,13 +174,13 @@ def run_encoder(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
 # Layer-stack execution (scan, remat, hybrid segments)
 # ---------------------------------------------------------------------------
 
-def _scan_stack(blocks, x, cfg, positions, caches, cache_index, enc=None):
+def _scan_stack(blocks, x, cfg, positions, caches, cache_index, enc=None, start=None):
     """Scan over stacked layer params; caches may be None."""
     if isinstance(blocks, list):  # scan_layers=False: unrolled python loop
         new_cs = []
         for i, p in enumerate(blocks):
             c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
-            x, nc = apply_block(p, x, cfg, positions, c, cache_index, enc)
+            x, nc = apply_block(p, x, cfg, positions, c, cache_index, enc, start)
             new_cs.append(nc)
         if caches is None:
             return x, None
@@ -182,7 +191,7 @@ def _scan_stack(blocks, x, cfg, positions, caches, cache_index, enc=None):
             p, c = xs, None
         else:
             p, c = xs
-        y, new_c = apply_block(p, carry, cfg, positions, c, cache_index, enc)
+        y, new_c = apply_block(p, carry, cfg, positions, c, cache_index, enc, start)
         return y, (new_c if caches is not None else 0)
 
     if cfg.remat and caches is None:
@@ -193,7 +202,7 @@ def _scan_stack(blocks, x, cfg, positions, caches, cache_index, enc=None):
     return x, new_caches
 
 
-def _run_hybrid(params, x, cfg, positions, caches, cache_index):
+def _run_hybrid(params, x, cfg, positions, caches, cache_index, start=None):
     """zamba2: mamba backbone with a weight-shared attention block applied
     every ``hybrid_attn_every`` layers. caches = (ssm_caches_stacked,
     attn_caches_stacked_per_application) or None."""
@@ -210,13 +219,14 @@ def _run_hybrid(params, x, cfg, positions, caches, cache_index):
             if ssm_caches is not None
             else None
         )
-        x, nc = _scan_stack(seg_blocks, x, cfg, positions, seg_cache, cache_index)
+        x, nc = _scan_stack(seg_blocks, x, cfg, positions, seg_cache, cache_index,
+                            start=start)
         if nc is not None:
             new_ssm.append(nc)
         # shared attention block (weights reused; per-application KV cache)
         h = L.rms_norm(x, sp["ln1"])
         ac = attn.KVCache(*(a[s] for a in attn_caches)) if attn_caches is not None else None
-        a, nac = attn.gqa_attention(sp["attn"], h, cfg, positions, ac, cache_index)
+        a, nac = attn.gqa_attention(sp["attn"], h, cfg, positions, ac, cache_index, start)
         x = x + a
         h = L.rms_norm(x, sp["ln2"])
         x = x + L.mlp(sp["mlp"], h, cfg.quant)
@@ -312,9 +322,14 @@ def _wrap_cache(cfg: ArchConfig, tree):
 def _write_token_slice(stack: jax.Array, sl: jax.Array, layer, index) -> jax.Array:
     """Write a new-token cache slice (B, s, ...) into a stacked cache
     (L, B, S_max, ...) at (layer, :, index). Only the token slice moves —
-    the decode-traffic discipline (DESIGN.md §Perf)."""
-    starts = (layer, 0, index) + (0,) * (stack.ndim - 3)
-    return jax.lax.dynamic_update_slice(stack, sl[None].astype(stack.dtype), starts)
+    the decode-traffic discipline (DESIGN.md §Perf). ``index`` may be a
+    (B,) vector (ragged decode): each batch row then lands at its own
+    sequence offset via a vmapped per-row update."""
+    sl = sl.astype(stack.dtype)
+    if jnp.ndim(index) == 0:
+        starts = (layer, 0, index) + (0,) * (stack.ndim - 3)
+        return jax.lax.dynamic_update_slice(stack, sl[None], starts)
+    return stack.at[layer].set(attn.write_cache_rows(stack[layer], sl, index))
 
 
 def _write_full_state(stack: jax.Array, st: jax.Array, layer) -> jax.Array:
@@ -331,9 +346,19 @@ def decode_step(
     index: jax.Array,
     cfg: ArchConfig,
     enc: Optional[jax.Array] = None,
+    start: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, PyTree]:
     """One decode step. tokens: (B, S_step) (S_step=1 for pure decode);
-    ``index`` is the write offset into the caches. Returns (logits, caches).
+    ``index`` is the write offset into the caches — a scalar (every row
+    at the same position: prefill / ``generate()``) or a (B,) vector
+    (ragged decode: continuous-batching slots at heterogeneous
+    positions). Returns (logits, caches).
+
+    ``start`` (optional, (B,)) is the left-padding dead-zone boundary of
+    a batched ragged prefill: cache slots below ``start[i]`` hold pad
+    garbage and stay masked; RoPE positions are computed in *logical*
+    coordinates ``index - start`` so each row's first real token is
+    position 0 regardless of padding (DESIGN.md §6).
 
     The stacked caches ride in the scan *carry* and receive in-place
     token-slice writes (attention) / state writes (SSM) at the current
@@ -341,9 +366,14 @@ def decode_step(
     """
     x = L.embed(tokens, params["embed"]).astype(_dtype(cfg))
     b, s = x.shape[:2]
-    positions = index + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    idx = jnp.asarray(index, jnp.int32)
+    base = idx if start is None else idx - start  # logical position of token 0
+    positions = (
+        jnp.broadcast_to(base, (b,))[:, None]
+        + jnp.arange(s, dtype=jnp.int32)[None, :]
+    )
     if cfg.family == "hybrid":
-        x, new_caches = _run_hybrid(params, x, cfg, positions, caches, index)
+        x, new_caches = _run_hybrid(params, x, cfg, positions, caches, idx, start)
     else:
         stacks = tuple(caches)
         ssm_like = cfg.family == "ssm"
@@ -356,20 +386,32 @@ def decode_step(
         def body(y, xs):
             p, c = xs
             c = _wrap_cache(cfg, c)
-            y, new_c = apply_block(p, y, cfg, positions, c, index, enc)
+            y, new_c = apply_block(p, y, cfg, positions, c, idx, enc, start)
             return y, tuple(new_c)
 
         x, token_slices = jax.lax.scan(body, x, (params["blocks"], stacks))
         if ssm_like:
             new_caches = _wrap_cache(cfg, token_slices)
-        else:
+        elif idx.ndim == 0:
             # token_slices leaves: (L, B, s, ...); write at seq pos `index`
             written = tuple(
                 jax.lax.dynamic_update_slice(
                     stack,
                     ts.astype(stack.dtype),
-                    (0, 0, index) + (0,) * (stack.ndim - 3),
+                    (0, 0, idx) + (0,) * (stack.ndim - 3),
                 )
+                for stack, ts in zip(stacks, token_slices)
+            )
+            new_caches = _wrap_cache(cfg, written)
+        else:
+            # ragged decode: every row writes all layers at its own offset
+            written = tuple(
+                jax.vmap(
+                    lambda stack_r, ts_r, i: jax.lax.dynamic_update_slice(
+                        stack_r, ts_r, (0, i) + (0,) * (stack_r.ndim - 2)),
+                    in_axes=(1, 1, 0),
+                    out_axes=1,
+                )(stack, ts.astype(stack.dtype), idx)
                 for stack, ts in zip(stacks, token_slices)
             )
             new_caches = _wrap_cache(cfg, written)

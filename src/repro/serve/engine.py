@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.execution import CiMExecSpec
@@ -145,15 +146,58 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set when the slot hit cache capacity (s_max) before max_new tokens;
+    # with left-padded batched prefill the pad dead zone counts against
+    # capacity, so a short prompt co-batched with a long one can run out
+    # of slots earlier than per-request generate() would
+    truncated: bool = False
+
+
+def _next_pow2(n: int, lo: int = 4) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
 
 
 class ContinuousBatcher:
-    """Slot-pool continuous batcher over the jitted serve step.
+    """Slot-pool continuous batcher over one fused, jitted decode step.
 
-    Each slot owns a cache region (per-slot caches batched along axis 0 of
-    every cache leaf). Finished slots are refilled without stalling the
-    others; per-slot position indices make the single fused decode step
-    valid for heterogeneous progress.
+    Each slot owns a cache region (per-slot caches batched along axis 1 of
+    every stacked cache leaf). Finished slots are refilled without
+    stalling the others.
+
+    The fused path (default) exploits the ragged-position decode contract
+    (DESIGN.md §6) end-to-end:
+
+      * **one** batched ``decode_step`` serves all slots at heterogeneous
+        cache positions via a ``(n_slots,)`` position vector — no
+        per-slot Python loop inside jit, so the traced program size and
+        compile count are independent of ``n_slots``;
+      * newly assigned slots prefill **together** in one left-padded
+        batch (prompts right-aligned so every row's last real token sits
+        in the last column; the per-row ``start`` vector masks the dead
+        pad slots for the slot's lifetime); padded lengths are bucketed
+        to powers of two to bound recompiles. The pad dead zone counts
+        against the slot's s_max capacity, so a short prompt co-batched
+        with a much longer one can hit the cache limit before max_new —
+        such requests finish with ``truncated=True``;
+      * sampling happens on device inside the jitted step — the host
+        fetches exactly one small token vector per decode step
+        (``host_syncs`` counts these).
+
+    ``fused=False`` keeps the legacy per-slot-loop decode (a static
+    Python loop of single-row steps inside jit, per-slot prefill, one
+    host sync per active slot) as the measured baseline for
+    ``benchmarks/bench_serve.py``.
+
+    ``prepare_weights=True`` runs ``quant.prepare.prepare_for_spec`` once
+    at construction so the per-step STE re-quantization is skipped
+    (``pre_quantized``); for a bitplane-packed spec the stored 2-bit
+    planes are kept on ``self.packed``, reusable across steps by
+    ``api.execute_packed`` callers, and the in-model dense path serves
+    from the folded ternary weights (packing downgraded to "none" so
+    nothing re-packs per forward).
     """
 
     def __init__(
@@ -163,29 +207,177 @@ class ContinuousBatcher:
         n_slots: int = 4,
         s_max: int = 128,
         exec_spec: Optional[CiMExecSpec] = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+        fused: bool = True,
+        prepare_weights: bool = False,
     ):
+        self.packed = None
+        if prepare_weights and exec_spec is None:
+            raise ValueError(
+                "prepare_weights=True requires exec_spec (the surgery is "
+                "matched to the spec's packing); for spec-less offline "
+                "ternarization use quant.prepare.ternarize_params + "
+                "QuantConfig(pre_quantized=True)"
+            )
+        if prepare_weights and exec_spec is not None:
+            from repro.quant.prepare import prepare_for_spec
+
+            prepared = prepare_for_spec(params, exec_spec)
+            if exec_spec.packing == "bitplane_u8":
+                params, self.packed = prepared
+                exec_spec = dataclasses.replace(exec_spec, packing="none")
+            else:
+                params = prepared
+            cfg = cfg.replace(
+                quant=dataclasses.replace(cfg.quant, pre_quantized=True)
+            )
         self.params = params
         self.cfg = cfg = apply_exec_spec(cfg, exec_spec)
         self.n_slots = n_slots
         self.s_max = s_max
+        self.temperature = float(temperature)
+        self.fused = fused
+        self._key = jax.random.PRNGKey(seed)
         self.caches = T.init_caches(cfg, n_slots, s_max)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.slot_pos = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_pos = np.zeros((n_slots,), np.int32)    # next cache write slot
+        self.slot_start = np.zeros((n_slots,), np.int32)  # left-pad dead zone
+        self._last_tok = np.zeros((n_slots,), np.int32)
         self.queue: List[Request] = []
-        self._decode = self._build_decode()
+        self.decode_steps = 0
+        self.host_syncs = 0
+        self._step_idx = 0
+        self._prefill_idx = 0
+        if not fused and self.temperature != 0.0:
+            raise ValueError(
+                "temperature sampling is only implemented for the fused "
+                "decode path (the looped baseline is greedy-only)"
+            )
+        if fused:
+            self._decode = self._build_decode_fused()
+            self._prefill = self._build_prefill_fused()
+        else:
+            self._decode = self._build_decode_looped()
 
-    def _build_decode(self):
+    # -- fused path ---------------------------------------------------------
+
+    def _sample_on_device(self, last_logits, key):
+        """last_logits: (B, V) -> (B,) int32, greedy or temperature —
+        the module-level :func:`sample`, traced into the jitted step."""
+        return sample(last_logits[:, None, :], key, self.temperature)[:, 0]
+
+    def _build_decode_fused(self):
+        cfg = self.cfg
+
+        def step(params, tokens, caches, positions, start, key):
+            logits, caches = T.decode_step(
+                params, tokens, caches, positions, cfg, start=start)
+            toks = self._sample_on_device(logits[:, -1, :], key)
+            return toks, caches
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def _build_prefill_fused(self):
+        cfg, n, s_max = self.cfg, self.n_slots, self.s_max
+
+        def pf(params, caches, tokens, start, fill_mask, key):
+            # prefill all n_slots rows against fresh zero caches (dummy
+            # rows compute garbage that the merge mask discards), then
+            # select per row: filling slots take the new cache row,
+            # in-flight slots keep theirs.
+            fresh = T.init_caches(cfg, n, s_max)
+            logits, new = T.decode_step(
+                params, tokens, fresh, jnp.int32(0), cfg, start=start)
+            # left-padding: the last column is every row's last real token
+            toks = self._sample_on_device(logits[:, -1, :], key)
+
+            def merge(old, nw):
+                m = fill_mask.reshape((1, n) + (1,) * (old.ndim - 2))
+                return jnp.where(m, nw.astype(old.dtype), old)
+
+            return toks, jax.tree.map(merge, caches, new)
+
+        return jax.jit(pf, donate_argnums=(1,))
+
+    def _fill_slots_fused(self):
+        newly = []
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                self.slot_req[s] = self.queue.pop(0)
+                newly.append(s)
+        if not newly:
+            return
+        max_len = max(len(self.slot_req[s].prompt) for s in newly)
+        s_pad = _next_pow2(max_len)  # bucketed: bounds prefill recompiles
+        if s_pad >= self.s_max:
+            # don't let the bucket make a servable prompt unservable:
+            # fall back to the exact length (one extra compile, worth it)
+            s_pad = max_len
+        tokens = np.zeros((self.n_slots, s_pad), np.int32)
+        start = np.zeros((self.n_slots,), np.int32)
+        fill = np.zeros((self.n_slots,), bool)
+        for s in newly:
+            prompt = self.slot_req[s].prompt
+            pad = s_pad - len(prompt)
+            tokens[s, pad:] = prompt
+            start[s] = pad
+            fill[s] = True
+        # decode steps draw even fold_in streams, prefill batches odd ones
+        key = jax.random.fold_in(self._key, 2 * self._prefill_idx + 1)
+        self._prefill_idx += 1
+        toks, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(tokens), jnp.asarray(start),
+            jnp.asarray(fill), key)
+        toks = np.asarray(toks)  # one host fetch for the whole fill batch
+        self.host_syncs += 1
+        for s in newly:
+            req = self.slot_req[s]
+            req.generated.append(int(toks[s]))
+            self._last_tok[s] = toks[s]
+            self.slot_pos[s] = s_pad
+            self.slot_start[s] = start[s]
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self.slot_req[s] = None
+
+    def _step_fused(self, active) -> int:
+        tokens = jnp.asarray(self._last_tok[:, None])
+        positions = jnp.asarray(self.slot_pos)
+        start = jnp.asarray(self.slot_start)
+        key = jax.random.fold_in(self._key, 2 * self._step_idx)
+        toks, self.caches = self._decode(
+            self.params, tokens, self.caches, positions, start, key)
+        self.decode_steps += 1
+        self._step_idx += 1
+        toks = np.asarray(toks)  # the single host fetch of this step
+        self.host_syncs += 1
+        for s in active:
+            req = self.slot_req[s]
+            req.generated.append(int(toks[s]))
+            self._last_tok[s] = toks[s]
+            self.slot_pos[s] += 1
+            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max - 1:
+                req.done = True
+                req.truncated = len(req.generated) < req.max_new
+                self.slot_req[s] = None
+        return len(active)
+
+    # -- legacy per-slot-loop baseline (benchmarks/bench_serve.py) ----------
+
+    def _build_decode_looped(self):
         cfg = self.cfg
 
         def step(params, tokens, caches, positions):
-            # Slots progress heterogeneously, so each row decodes at its
-            # own cache position: a small static per-slot loop (slot count
-            # is tiny) keeps the fused step jit-compatible.
+            # the pre-ragged-decode formulation: a static per-slot Python
+            # loop of single-row steps inside jit — the traced program
+            # grows linearly with n_slots and recompiles when it changes.
             b = tokens.shape[0]
             flat, treedef = jax.tree_util.tree_flatten(caches)
             row_caches = [
                 jax.tree_util.tree_unflatten(
-                    treedef, [leaf[:, i : i + 1] if leaf.ndim > 1 else leaf for leaf in flat]
+                    treedef,
+                    [leaf[:, i : i + 1] if leaf.ndim > 1 else leaf for leaf in flat],
                 )
                 for i in range(b)
             ]
@@ -203,19 +395,17 @@ class ContinuousBatcher:
 
         return jax.jit(step)
 
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _fill_slots(self):
+    def _fill_slots_looped(self):
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[s] = req
-                # prefill this slot alone
+                # prefill this slot alone (recompiles per prompt length)
                 prompt = jnp.asarray(req.prompt, jnp.int32)[None]
                 flat, treedef = jax.tree_util.tree_flatten(self.caches)
                 row = jax.tree_util.tree_unflatten(
-                    treedef, [leaf[:, s : s + 1] if leaf.ndim > 1 else leaf for leaf in flat]
+                    treedef,
+                    [leaf[:, s : s + 1] if leaf.ndim > 1 else leaf for leaf in flat],
                 )
                 logits, row = prefill(self.params, prompt, row, self.cfg)
                 flat_row = jax.tree_util.tree_leaves(row)
@@ -225,9 +415,56 @@ class ContinuousBatcher:
                         leaf = jax.lax.dynamic_update_slice_in_dim(leaf, rl, s, axis=1)
                     new_flat.append(leaf)
                 self.caches = jax.tree_util.tree_unflatten(treedef, new_flat)
-                tok = int(jnp.argmax(logits[0, -1]))
+                tok = int(jnp.argmax(logits[0, -1]))  # per-slot host sync
+                self.host_syncs += 1
                 req.generated.append(tok)
-                self.slot_pos = self.slot_pos.at[s].set(len(req.prompt))
+                self._last_tok[s] = tok
+                self.slot_pos[s] = len(req.prompt)
+                self.slot_start[s] = 0
+                if len(req.generated) >= req.max_new:
+                    req.done = True
+                    self.slot_req[s] = None
+
+    def _step_looped(self, active) -> int:
+        tokens = jnp.asarray(self._last_tok[:, None])
+        logits, self.caches = self._decode(
+            self.params, tokens, self.caches, jnp.asarray(self.slot_pos))
+        self.decode_steps += 1
+        self._step_idx += 1
+        toks = jnp.argmax(logits[:, 0, :], axis=-1)
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(toks[s])  # one host sync per active slot
+            self.host_syncs += 1
+            req.generated.append(tok)
+            self._last_tok[s] = tok
+            self.slot_pos[s] += 1
+            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max - 1:
+                req.done = True
+                req.truncated = len(req.generated) < req.max_new
+                self.slot_req[s] = None
+        return len(active)
+
+    # -- shared driver ------------------------------------------------------
+
+    def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(
+                "empty prompt: serving needs at least one prompt token "
+                "(the first sampled token conditions on it)"
+            )
+        if len(req.prompt) >= self.s_max:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} does not fit a cache of "
+                f"s_max={self.s_max} (needs at least one decode slot)"
+            )
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        if self.fused:
+            self._fill_slots_fused()
+        else:
+            self._fill_slots_looped()
 
     def step(self) -> int:
         """One decode step over all active slots; returns #active."""
@@ -235,23 +472,12 @@ class ContinuousBatcher:
         active = [s for s in range(self.n_slots) if self.slot_req[s] is not None]
         if not active:
             return 0
-        tokens = jnp.asarray(
-            [
-                [self.slot_req[s].generated[-1]] if self.slot_req[s] else [0]
-                for s in range(self.n_slots)
-            ],
-            jnp.int32,
-        )
-        logits, self.caches = self._decode(self.params, tokens, self.caches, self.slot_pos)
-        toks = jnp.argmax(logits[:, 0, :], axis=-1)
-        for s in active:
-            req = self.slot_req[s]
-            req.generated.append(int(toks[s]))
-            self.slot_pos = self.slot_pos.at[s].add(1)
-            if len(req.generated) >= req.max_new or int(self.slot_pos[s]) >= self.s_max - 1:
-                req.done = True
-                self.slot_req[s] = None
-        return len(active)
+        if self.fused:
+            return self._step_fused(active)
+        return self._step_looped(active)
+
+    def stats(self) -> Dict[str, int]:
+        return {"decode_steps": self.decode_steps, "host_syncs": self.host_syncs}
 
     def run(self) -> None:
         while self.queue or any(r is not None for r in self.slot_req):

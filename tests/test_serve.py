@@ -1,8 +1,10 @@
-"""Serving engine: generation, prefill consistency, continuous batching."""
+"""Serving engine: generation, prefill consistency, continuous batching,
+and the ragged-position decode contract (DESIGN.md §6)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import attention as A
 from repro.models import transformer as T
 from repro.models.layers import QuantConfig
 from repro.models.registry import get_config
@@ -74,5 +76,292 @@ class TestContinuousBatcher:
         b.submit(r)
         # add a competing request so slots interleave
         b.submit(Request(1, [9, 8], max_new=4))
+        b.run()
+        np.testing.assert_array_equal(np.asarray(r.generated), solo)
+
+    def test_ragged_workload_matches_generate(self):
+        """Fused ragged decode: greedy tokens per request must match
+        per-request generate() exactly — ragged prompt lengths AND
+        heterogeneous max_new, more requests than slots (slots refill at
+        heterogeneous positions)."""
+        cfg, params = setup()
+        prompts = [[3, 1, 4], [9, 8], [2, 7, 1, 8, 2], [6]]
+        max_news = [4, 6, 3, 5]
+        solos = [
+            np.asarray(
+                generate(params, jnp.asarray([p], jnp.int32), cfg, max_new=m, s_max=32)
+            )[0]
+            for p, m in zip(prompts, max_news)
+        ]
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32)
+        reqs = [Request(i, p, max_new=m)
+                for i, (p, m) in enumerate(zip(prompts, max_news))]
+        for r in reqs:
+            b.submit(r)
+        b.run()
+        for r, solo in zip(reqs, solos):
+            assert r.done
+            np.testing.assert_array_equal(np.asarray(r.generated), solo)
+
+    def test_looped_baseline_matches_fused(self):
+        """The per-slot-loop baseline and the fused step serve identical
+        greedy tokens (both equal generate() row-by-row)."""
+        cfg, params = setup()
+        prompts = [[3, 1, 4], [9, 8], [5]]
+
+        def serve(fused):
+            b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32, fused=fused)
+            reqs = [Request(i, p, max_new=3 + i) for i, p in enumerate(prompts)]
+            for r in reqs:
+                b.submit(r)
+            b.run()
+            return [r.generated for r in reqs], b.stats()
+
+        fused_toks, fused_stats = serve(True)
+        looped_toks, looped_stats = serve(False)
+        assert fused_toks == looped_toks
+        # the fused step fetches once per decode step; the loop once per
+        # active slot per step (plus one per prefill in both modes)
+        assert fused_stats["host_syncs"] < looped_stats["host_syncs"]
+
+    def test_cim_mode_ragged_completes(self):
+        """Quantized serving completes under the fused step. (Exact
+        equivalence to generate() holds for row-independent numerics;
+        cim/ternary activation scales are per-tensor and couple batch
+        rows — DESIGN.md §6.)"""
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32)
+        reqs = [Request(i, [1 + i, 2], max_new=3) for i in range(3)]
+        for r in reqs:
+            b.submit(r)
+        b.run()
+        for r in reqs:
+            assert r.done and len(r.generated) >= 3
+            assert all(0 <= t < cfg.vocab for t in r.generated)
+
+    def test_long_prompt_not_blocked_by_pow2_bucket(self):
+        """A prompt in (s_max/2, s_max) must serve: the pow2 prefill
+        bucket falls back to the exact length instead of overflowing."""
+        cfg, params = setup()
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=16)
+        r = Request(0, list(range(1, 10)), max_new=3)  # len 9, bucket 16
+        b.submit(r)
+        b.run()
+        assert r.done and not r.truncated and len(r.generated) == 3
+
+    def test_oversized_prompt_rejected_at_submit(self):
+        cfg, params = setup()
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=8)
+        try:
+            b.submit(Request(0, list(range(8)), max_new=2))
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("submit accepted an unservable prompt")
+
+    def test_empty_prompt_rejected_at_submit(self):
+        cfg, params = setup()
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=8)
+        try:
+            b.submit(Request(0, [], max_new=2))
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("submit accepted an empty prompt")
+
+    def test_prepare_weights_packs_planes_once(self):
+        """prepare_weights=True under a bitplane spec: serving completes
+        from folded weights (no per-forward packing warning), the stored
+        planes land on .packed, and they are consumable by
+        api.execute_packed (matching the unpacked execute)."""
+        import warnings
+
+        from repro import api
+
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        spec = api.CiMExecSpec(formulation="bitplane", backend="jnp",
+                               packing="bitplane_u8")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # packed-per-forward must NOT warn
+            b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32,
+                                  exec_spec=spec, prepare_weights=True)
+        assert b.packed and b.cfg.quant.pre_quantized
+        assert b.cfg.quant.exec_spec.packing == "none"
+        r = Request(0, [3, 1, 4], max_new=3)
+        b.submit(r)
+        b.run()
+        assert r.done and len(r.generated) == 3
+        # stored planes have the execute_packed layout: uint8 (M1, M2)
+        # plus the folded per-channel scale (the api.execute_packed
+        # contract itself is pinned in tests/test_execution.py)
+        for path, (p1, p2, scale) in b.packed.items():
+            assert p1.dtype == jnp.uint8 and p2.dtype == jnp.uint8
+            assert p1.shape == p2.shape
+
+    def test_prepare_weights_requires_spec(self):
+        cfg, params = setup()
+        try:
+            ContinuousBatcher(params, cfg, n_slots=2, s_max=8,
+                              prepare_weights=True)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("prepare_weights without exec_spec accepted")
+
+    def test_capacity_cut_marks_truncated(self):
+        """A slot that runs out of cache before max_new finishes with
+        truncated=True (left-pad dead zone counts against capacity)."""
+        cfg, params = setup()
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=12)
+        long_r = Request(0, list(range(1, 8)), max_new=20)   # len 7 -> s_pad 8
+        short_r = Request(1, [5, 3], max_new=20)             # pad dead zone 6
+        b.submit(long_r)
+        b.submit(short_r)
+        b.run()
+        for r in (long_r, short_r):
+            assert r.done and r.truncated and len(r.generated) < r.max_new
+
+    def test_temperature_sampling_runs_on_device(self):
+        cfg, params = setup()
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32, temperature=0.8,
+                              seed=3)
+        r = Request(0, [3, 1, 4], max_new=4)
+        b.submit(r)
+        b.run()
+        assert r.done and len(r.generated) == 4
+
+
+class TestRaggedDecodeContract:
+    """Unit coverage for the scalar-vs-(B,) cache index pivot."""
+
+    def test_per_row_cache_write_lands_at_own_offsets(self):
+        buf = jnp.zeros((3, 8, 2), jnp.float32)
+        new = jnp.ones((3, 1, 2), jnp.float32) * jnp.asarray(
+            [[[1.0]], [[2.0]], [[3.0]]])
+        out = np.array(A.write_cache_rows(buf, new, jnp.asarray([2, 5, 0])))
+        # each row wrote at its own offset...
+        assert (out[0, 2] == 1.0).all()
+        assert (out[1, 5] == 2.0).all()
+        assert (out[2, 0] == 3.0).all()
+        # ...and touched nothing else
+        out[0, 2] = out[1, 5] = out[2, 0] = 0.0
+        assert (out == 0.0).all()
+
+    def test_scalar_write_is_broadcast_of_vector_write(self):
+        buf = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 3))
+        new = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 3))
+        a = A.write_cache_rows(buf, new, jnp.int32(4))
+        b = A.write_cache_rows(buf, new, jnp.asarray([4, 4]))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_decode_step_vector_index_matches_scalar(self):
+        """decode_step with a broadcast (B,) index is bit-identical to the
+        scalar-index path (logits and cache contents)."""
+        cfg, params = setup()
+        prompt = jnp.asarray([[5, 9, 2], [7, 1, 3]], jnp.int32)
+        caches = T.init_caches(cfg, 2, 32)
+        _, caches = T.decode_step(params, prompt, caches, jnp.int32(0), cfg)
+        tok = jnp.asarray([[4], [8]], jnp.int32)
+        lg_s, c_s = T.decode_step(params, tok, caches, jnp.int32(3), cfg)
+        lg_v, c_v = T.decode_step(params, tok, caches, jnp.asarray([3, 3]), cfg)
+        np.testing.assert_array_equal(
+            np.asarray(lg_s, np.float32), np.asarray(lg_v, np.float32))
+        for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_decode_step_heterogeneous_rows_match_single_row(self):
+        """Rows decoding at different cache positions in one fused step
+        produce the same logits/caches as each row stepped alone."""
+        cfg, params = setup()
+        full = jnp.asarray([[5, 9, 2, 7, 4], [7, 1, 3, 8, 6]], jnp.int32)
+        # row caches at different depths: row 0 holds 4 tokens, row 1 holds 2
+        rows, row_caches, depths = [], [], [4, 2]
+        for r, depth in enumerate(depths):
+            c = T.init_caches(cfg, 1, 32)
+            _, c = T.decode_step(params, full[r : r + 1, :depth], c, jnp.int32(0), cfg)
+            row_caches.append(c)
+        merged = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                              *row_caches)
+        tok = jnp.asarray([[11], [13]], jnp.int32)
+        idx = jnp.asarray(depths)
+        lg, _ = T.decode_step(params, tok, merged, idx, cfg)
+        for r, depth in enumerate(depths):
+            lg_solo, _ = T.decode_step(
+                params, tok[r : r + 1], row_caches[r], jnp.int32(depth), cfg)
+            np.testing.assert_allclose(
+                np.asarray(lg[r : r + 1], np.float32),
+                np.asarray(lg_solo, np.float32), rtol=1e-5, atol=1e-5)
+
+    def test_decode_jaxpr_size_independent_of_n_slots(self):
+        """The fused step must not trace per-slot work: the jaxpr equation
+        count is identical for 2 and 6 slots."""
+        cfg, _ = setup()
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+        def eqns(n):
+            caches = T.init_caches(cfg, n, 32)
+            closed = jax.make_jaxpr(
+                lambda p, t, c, i, s: T.decode_step(p, t, c, i, cfg, start=s)
+            )(params, jnp.zeros((n, 1), jnp.int32), caches,
+              jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32))
+            return len(closed.jaxpr.eqns)
+
+        assert eqns(2) == eqns(6)
+
+
+class TestSSMCachedPrefill:
+    def test_mamba2_cached_prefill_matches_stepwise(self):
+        """mamba2_block with a cache and S > 1 (batched prefill) must
+        agree with S = 1 token-by-token decode."""
+        cfg = get_config("mamba2-780m", smoke=True).replace(
+            quant=QuantConfig(mode="off"))
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.asarray([[5, 9, 2, 7]], jnp.int32)
+        caches = T.init_caches(cfg, 1, 32)
+        lg_pf, c_pf = T.decode_step(params, prompt, caches, jnp.int32(0), cfg)
+        c = T.init_caches(cfg, 1, 32)
+        for t in range(4):
+            lg, c = T.decode_step(params, prompt[:, t : t + 1], c, jnp.int32(t), cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg_pf[:, -1:], np.float32), np.asarray(lg, np.float32),
+            rtol=1e-5, atol=1e-5)
+        for a, b in zip(jax.tree.leaves(c_pf), jax.tree.leaves(c)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-5, atol=1e-5)
+
+    def test_mla_ragged_batcher_matches_generate(self):
+        """deepseek-v2 (MLA attention): the per-row causal/start masks
+        and vmapped latent-cache writes must reproduce generate()."""
+        cfg = get_config("deepseek-v2-236b", smoke=True).replace(
+            quant=QuantConfig(mode="off"), moe_capacity_factor=8.0)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        solo = np.asarray(
+            generate(params, jnp.asarray([[3, 1, 4]], jnp.int32), cfg,
+                     max_new=4, s_max=32))[0]
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32)
+        r = Request(0, [3, 1, 4], max_new=4)
+        b.submit(r)
+        b.submit(Request(1, [9, 8], max_new=5))
+        b.run()
+        np.testing.assert_array_equal(np.asarray(r.generated), solo)
+
+    def test_hybrid_ragged_batcher_matches_generate(self):
+        """zamba2 (ssm backbone + shared attention): the fused ragged
+        batcher must reproduce generate() exactly — covers the per-row
+        hybrid token-slice writes and the SSM pad masking."""
+        cfg = get_config("zamba2-2.7b", smoke=True).replace(
+            quant=QuantConfig(mode="off"))
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        solo = np.asarray(
+            generate(params, jnp.asarray([[3, 1, 4]], jnp.int32), cfg,
+                     max_new=4, s_max=32))[0]
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32)
+        r = Request(0, [3, 1, 4], max_new=4)
+        b.submit(r)
+        b.submit(Request(1, [9, 8], max_new=5))
         b.run()
         np.testing.assert_array_equal(np.asarray(r.generated), solo)
