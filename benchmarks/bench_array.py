@@ -1,52 +1,98 @@
 """Paper Figs 9 & 11: array-level CiM/read/write latency+energy vs NM,
-per technology and flavor — derived from the calibrated cost model and
-checked against the paper's reported percentages.
+per technology and design — derived from the declarative hardware model
+(``repro.hw``) and checked against the paper's reported percentages.
 
-The designs are named through the execution API: a ``CiMExecSpec`` maps
-onto the paper's array designs via ``repro.api.spec_design`` (exact MAC
+Rows iterate the *registries*: every registered technology x the CiM
+designs it provides cost parameters for, so a technology registered at
+runtime (``hw.register_technology``) appears here with zero edits. The
+designs are named through the execution API too: a ``CiMExecSpec`` maps
+onto each array design via ``repro.api.spec_design`` (exact MAC
 semantics -> NM baseline; clamped formulations -> SiTe CiM, flavor
-choosing I vs II), so the cost rows correspond one-to-one with specs a
-model can actually serve under.
+choosing the design), so the cost rows correspond one-to-one with specs
+a model can actually serve under.
+
+Emits ``BENCH_array.json`` (same contract as ``BENCH_serve.json``: CI
+runs this in the bench-smoke job, validates the JSON and uploads it as
+a workflow artifact). The ``paper_validation`` block carries the six
+pinned (tech, design) Fig 9/11 rows; registered non-paper technologies
+appear in ``rows`` only.
 """
 from __future__ import annotations
 
-from repro import api
-from repro.core import cost_model as cm
+import argparse
+import json
 
-# the execution specs behind each of the paper's array designs
-DESIGN_SPECS = {
-    "CiM-I": api.CiMExecSpec(formulation="blocked", flavor="I"),
-    "CiM-II": api.CiMExecSpec(formulation="blocked", flavor="II"),
-}
+from repro import api, hw
+
+
+def _exec_spec_for(design: str):
+    """The CiMExecSpec that executes on ``design``, or None when no
+    registered execution flavor maps onto it (a cost-only design still
+    gets rows — registry extensibility must not hinge on the execution
+    API knowing the flavor)."""
+    flavor = hw.get_design(design).flavor
+    if flavor not in api.FLAVORS:
+        return None
+    spec = api.CiMExecSpec(formulation="blocked", flavor=flavor)
+    # two designs sharing a flavor resolve to the first match only
+    return spec if api.spec_design(spec) == design else None
 
 
 def rows():
     out = []
-    for tech in cm.TECHNOLOGIES:
-        for design, spec in DESIGN_SPECS.items():
-            assert api.spec_design(spec) == design
-            t = cm.paper_validation_table()[tech][design]
-            cost = api.spec_cost_summary(spec, tech)
+    for tech in hw.technologies():
+        for design in hw.cim_designs_of(tech):
+            array = hw.ArraySpec(technology=tech, design=design)
+            spec = _exec_spec_for(design)
+            if spec is not None:
+                cost = api.spec_cost_summary(spec, array=array)
+                mac_ns, mac_pj = cost["mac_pass_ns"], cost["mac_pass_pj"]
+            else:
+                c = hw.array_cost(array)
+                mac_ns, mac_pj = c.mac_pass_ns, c.mac_pass_pj
+            claims = hw.design_claims(array)
+            paper = tech in hw.PAPER_TECHNOLOGIES and design in ("CiM-I", "CiM-II")
             out.append({
-                "figure": "Fig9" if design == "CiM-I" else "Fig11",
+                "figure": ("Fig9" if design == "CiM-I" else "Fig11") if paper else "",
                 "tech": tech,
                 "design": design,
-                "spec": spec.name,
-                "mac_pass_ns": round(cost["mac_pass_ns"], 2),
-                **{k: round(v, 2) for k, v in t.items()},
+                "spec": spec.name if spec is not None else "",
+                "array": array.name,
+                "mac_pass_ns": round(mac_ns, 2),
+                "mac_pass_pj": round(mac_pj, 2),
+                **{k: round(v, 2) for k, v in claims.items()},
             })
     return out
 
 
-def run(csv: bool = True):
+def run(csv: bool = True, out: str = "BENCH_array.json"):
     rs = rows()
     if csv:
         keys = list(rs[0].keys())
         print(",".join(keys))
         for r in rs:
             print(",".join(str(r[k]) for k in keys))
+    result = {
+        "bench": "array",
+        "technologies": list(hw.technologies()),
+        "designs": list(hw.designs()),
+        "rows": rs,
+        "paper_validation": hw.paper_validation_table(),
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[bench_array] wrote {out}")
     return rs
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_array.json")
+    args = ap.parse_args(argv)
+    run(out=args.out)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -1,18 +1,40 @@
-"""Paper Figs 12 & 13: system-level speedup and energy reduction of SiTe
-CiM I/II vs iso-capacity / iso-area NM baselines, per technology, over the
-5-benchmark suite (AlexNet, ResNet34, Inception, LSTM, GRU)."""
+"""System-level projections through the TiM-DNN-style macro model.
+
+Two sections:
+
+  * **paper** (Figs 12 & 13): speedup and energy reduction of SiTe CiM
+    I/II vs iso-capacity / iso-area NM baselines, per technology, over
+    the paper's 5-benchmark suite (AlexNet, ResNet34, Inception, LSTM,
+    GRU) — with the paper-reported averages attached for validation.
+  * **projections** (the workload the paper never ran): every registry
+    architecture (transformer / SSM / hybrid / MoE / encdec / VLM) x
+    prefill/decode shape, run through the same macro model via
+    ``repro.hw.project`` on every registered technology's CiM-I and
+    CiM-II arrays — projected tokens/s, pJ/token, and the CiM-vs-NM
+    speedups. A technology registered at runtime appears here with zero
+    edits.
+
+Emits ``BENCH_system.json`` (same contract as ``BENCH_serve.json``: CI
+validates + uploads it in the bench-smoke job).
+"""
 from __future__ import annotations
 
-from repro.core import accelerator as acc
-from repro.core import cost_model as cm
+import argparse
+import json
+
+from repro import hw
+
+# registry cells projected by default: every arch, one prefill + one
+# decode shape (both supported by all archs; pure cost-model math)
+PROJECTION_SHAPES = ("prefill_32k", "decode_32k")
 
 
 def rows():
     out = []
     for design in ("CiM-I", "CiM-II"):
-        for tech in cm.TECHNOLOGIES:
+        for tech in hw.PAPER_TECHNOLOGIES:
             for baseline in ("iso-capacity", "iso-area"):
-                per = acc.speedup_and_energy(tech, design, baseline)
+                per = hw.speedup_and_energy(tech, design, baseline)
                 for bench, v in per.items():
                     out.append({
                         "figure": "Fig12" if design == "CiM-I" else "Fig13",
@@ -23,30 +45,83 @@ def rows():
                         "speedup": round(v["speedup"], 2),
                         "energy_reduction": round(v["energy_reduction"], 2),
                     })
-                paper_s = acc.PAPER_SYSTEM_SPEEDUP[(design, baseline)][tech]
+                paper_s = hw.PAPER_SYSTEM_SPEEDUP[(design, baseline)][tech]
                 out.append({
                     "figure": "Fig12" if design == "CiM-I" else "Fig13",
                     "design": design, "tech": tech, "baseline": baseline,
                     "benchmark": "AVERAGE",
-                    "speedup": round(acc.average_speedup(tech, design, baseline), 2),
+                    "speedup": round(hw.average_speedup(tech, design, baseline), 2),
                     "energy_reduction": round(
-                        acc.average_energy_reduction(tech, design, baseline), 2),
+                        hw.average_energy_reduction(tech, design, baseline), 2),
                     "paper_speedup": paper_s,
-                    "paper_energy": acc.PAPER_SYSTEM_ENERGY[design][tech],
+                    "paper_energy": hw.PAPER_SYSTEM_ENERGY[design][tech],
                 })
     return out
 
 
-def run(csv: bool = True):
+def projection_rows(shapes=PROJECTION_SHAPES):
+    """Registry archs through the macro model on every registered tech."""
+    from repro.models.registry import ARCH_IDS
+
+    out = []
+    for arch in ARCH_IDS:
+        for shape in shapes:
+            for tech in hw.technologies():
+                for design in hw.cim_designs_of(tech):
+                    array = hw.ArraySpec(technology=tech, design=design)
+                    p = hw.project(arch, shape, array)
+                    out.append({
+                        "arch": p["arch"],
+                        "family": p["family"],
+                        "shape": p["shape"],
+                        "tech": tech,
+                        "design": design,
+                        "tok_s": round(p["tok_s"], 1),
+                        "pj_per_token": round(p["pj_per_token"], 1),
+                        "speedup_iso_capacity": round(
+                            p["iso_capacity"]["speedup"], 2),
+                        "speedup_iso_area": round(p["iso_area"]["speedup"], 2),
+                        "energy_reduction": round(
+                            p["iso_capacity"]["energy_reduction"], 2),
+                    })
+    return out
+
+
+def run(csv: bool = True, out: str = "BENCH_system.json"):
     rs = rows()
+    pr = projection_rows()
     if csv:
         keys = ["figure", "design", "tech", "baseline", "benchmark",
                 "speedup", "energy_reduction", "paper_speedup", "paper_energy"]
         print(",".join(keys))
         for r in rs:
             print(",".join(str(r.get(k, "")) for k in keys))
+        pkeys = ["arch", "family", "shape", "tech", "design", "tok_s",
+                 "pj_per_token", "speedup_iso_capacity", "speedup_iso_area",
+                 "energy_reduction"]
+        print("\n" + ",".join(pkeys))
+        for r in pr:
+            print(",".join(str(r[k]) for k in pkeys))
+    result = {
+        "bench": "system",
+        "technologies": list(hw.technologies()),
+        "rows": rs,
+        "projections": pr,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[bench_system] wrote {out}")
     return rs
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_system.json")
+    args = ap.parse_args(argv)
+    run(out=args.out)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-  bench_array    — Figs 9/11  (array-level CiM/read/write vs NM)
-  bench_system   — Figs 12/13 (system-level speedup/energy, 5 DNNs)
+  bench_array    — Figs 9/11  (array-level CiM/read/write vs NM, every
+                   registered technology; emits BENCH_array.json)
+  bench_system   — Figs 12/13 (system-level speedup/energy, 5 DNNs) +
+                   registry-arch projections (emits BENCH_system.json)
   bench_accuracy — Section III.2 resilience (ADC clamp + sensing errors)
   bench_ablation — N_A / ADC-precision design-point sweep (Sections III.2, IV.4)
   bench_kernels  — kernel micro-bench (CPU wall time + cost profile)

@@ -14,9 +14,8 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro import api
+from repro import api, hw
 from repro.core.ternary import pack_ternary, ternarize
-from repro.core import accelerator as acc
 
 
 def main():
@@ -53,18 +52,21 @@ def main():
     wp, wn = pack_ternary(w_t.astype(jnp.int8), axis=0)
     print(f"weight bytes: fp32 {w_f.nbytes}, packed 2-bit {wp.nbytes + wn.nbytes}")
 
-    # cost model: the spec maps onto the paper's array designs
+    # hardware model: the spec binds to a declarative ArraySpec
     design = api.spec_design(cim_spec)
-    cost = api.spec_cost_summary(cim_spec, "8T-SRAM")
-    print(f"\nspec {cim_spec.name} -> array design {design}")
-    import repro.core.cost_model as cm
-    t = cm.paper_validation_table()["8T-SRAM"][design]
+    array = hw.ArraySpec(technology="8T-SRAM", design=design)
+    cost = api.spec_cost_summary(cim_spec, array=array)
+    print(f"\nspec {cim_spec.name} -> array {array.name}")
+    t = hw.paper_validation_table()["8T-SRAM"][design]
     print(f"8T-SRAM SiTe CiM I vs near-memory (paper Fig 9):")
     print(f"  CiM latency reduction : {t['cim_latency_reduction_pct']:.0f}%  (paper: 88%)")
     print(f"  CiM energy reduction  : {t['cim_energy_reduction_pct']:.0f}%  (paper: 74%)")
     print(f"  MAC pass              : {cost['mac_pass_ns']:.0f} ns")
-    s = acc.average_speedup("8T-SRAM", design, "iso-capacity")
+    s = hw.average_speedup("8T-SRAM", design, "iso-capacity")
     print(f"  system speedup (5 DNNs, iso-capacity): {s:.2f}x (paper: 6.74x)")
+    p = hw.project("yi-34b", "decode_32k", array)
+    print(f"  projected yi-34b decode on that array: {p['tok_s']:.0f} tok/s, "
+          f"{p['iso_capacity']['speedup']:.1f}x vs iso-capacity NM")
 
 
 if __name__ == "__main__":

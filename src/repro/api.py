@@ -1,12 +1,19 @@
-"""``repro.api`` — the public execution API for signed-ternary CiM MACs.
+"""``repro.api`` — the public API: declarative execution (what a ternary
+MAC computes, and how) plus declarative hardware (what it runs on).
 
     from repro import api
 
     spec = api.CiMExecSpec(formulation="blocked", backend="auto")
     out = api.execute(spec, x_t, w_t)
 
-See repro.core.execution for the full documentation and DESIGN.md for
-the architecture.
+    arr = api.ArraySpec(technology="3T-FEMFET", design="CiM-I")
+    api.spec_cost_summary(spec, array=arr)          # cost on that array
+    api.project("yi-34b", "decode_32k", arr)        # system projection
+
+New kernels land via ``register_backend``; new memory technologies /
+array designs via ``register_technology`` / ``register_design`` — both
+without touching any call site. See repro.core.execution and repro.hw
+for the full documentation, DESIGN.md §3/§7 for the architecture.
 """
 from repro.core.execution import (  # noqa: F401
     BACKENDS,
@@ -23,4 +30,20 @@ from repro.core.execution import (  # noqa: F401
     spec_array_cost,
     spec_cost_summary,
     spec_design,
+)
+from repro.hw import (  # noqa: F401
+    ArrayCost,
+    ArraySpec,
+    DesignMetrics,
+    DesignSpec,
+    MacroSpec,
+    TechnologySpec,
+    array_cost,
+    design_claims,
+    designs,
+    parse_array_spec,
+    project,
+    register_design,
+    register_technology,
+    technologies,
 )

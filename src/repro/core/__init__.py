@@ -5,8 +5,10 @@ Public surface:
   * ternary quantization / encodings (``repro.core.ternary``)
   * SiTe CiM array functional model (``repro.core.site_cim`` — aliases
     forwarding into the execution registry)
-  * array-level cost model, Figs 9/11 (``repro.core.cost_model``)
-  * TiM-DNN system model, Figs 12/13 (``repro.core.accelerator``)
+  * declarative hardware model — ArraySpec + technology/design
+    registries, array cost, system model, workload projection
+    (``repro.hw``; ``repro.core.cost_model`` and
+    ``repro.core.accelerator`` are deprecated shims over it)
 """
 from repro.core.execution import (  # noqa: F401
     CiMExecSpec,

@@ -1,283 +1,70 @@
-"""System-level TiM-DNN-style accelerator model (paper Section VI).
+"""DEPRECATED compatibility shim — the TiM-DNN-style system model now
+lives in ``repro.hw.macro`` (+ the paper's DNN suite in
+``repro.hw.dnn_suite``), generalized over ``ArraySpec``/``MacroSpec``
+(DESIGN.md §7).
 
-Maps DNN benchmark workloads (AlexNet, ResNet34, Inception, LSTM, GRU —
-the paper's suite) onto a macro of SiTe CiM (or NM) arrays and derives
-execution time and energy, reproducing Figs 12/13:
-
-  * 32 arrays of 256x256 ternary cells (2M ternary words / 512 kB),
-  * N_A = 16 rows asserted per cycle -> 16 cycles per full-column MAC pass,
-  * 32 PCUs per array (< N_C = 256): column partials are drained 32 at a
-    time, so a MAC pass takes ceil(256/32) = 8 PCU drain slots overlapped
-    with compute; we model the drain as part of the pass constants,
-  * NM baselines: iso-capacity (32 arrays) and iso-area (more arrays —
-    41/48/47 for CiM I comparisons and 38/42/41 for CiM II, per tech),
-  * weight reloading: layers larger than macro capacity are processed in
-    weight tiles; writing a tile costs row writes,
-  * a fixed per-output post-processing cost (quantization + activation in
-    the digital periphery) identical across designs — this is the Amdahl
-    term that brings the raw ~8.3x array-level CiM I advantage down to the
-    ~6.6-7.1x system-level speedups the paper reports.
-
-The post-processing rate is the single calibration constant; it was fitted
-once so the 8T-SRAM CiM I iso-capacity average lands near the paper's
-6.74x, and then *everything else* (other technologies, flavors, iso-area
-baselines, energy ratios) is a prediction of the model that EXPERIMENTS.md
-compares against the paper's numbers.
+Functions forward directly (same signatures, same outputs); legacy
+module constants forward with a ``DeprecationWarning`` — new code
+should size macros through ``hw.MacroSpec`` fields instead.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict, List, Sequence, Tuple
+import warnings
 
-from repro.core import cost_model as cm
+from repro.hw import array as _array
+from repro.hw import dnn_suite as _suite
+from repro.hw import macro as _macro
 
-N_ARRAYS = 32
-N_PCUS = 32
+# types + paper pins, re-exported unchanged
+GemmLayer = _macro.GemmLayer
+SystemResult = _macro.SystemResult
+conv = _macro.conv
+PAPER_SYSTEM_SPEEDUP = _macro.PAPER_SYSTEM_SPEEDUP
+PAPER_SYSTEM_ENERGY = _macro.PAPER_SYSTEM_ENERGY
 
-# Iso-area NM baseline array counts (paper Section VI.A).
-ISO_AREA_NM_ARRAYS = {
-    "CiM-I": {"8T-SRAM": 41, "3T-eDRAM": 48, "3T-FEMFET": 47},
-    "CiM-II": {"8T-SRAM": 38, "3T-eDRAM": 42, "3T-FEMFET": 41},
+# the paper's Section VI workloads
+alexnet = _suite.alexnet
+resnet34 = _suite.resnet34
+inception = _suite.inception
+lstm = _suite.lstm
+gru = _suite.gru
+get_benchmarks = _suite.get_benchmarks
+
+# the system model itself
+run_system = _macro.run_system
+speedup_and_energy = _macro.speedup_and_energy
+average_speedup = _macro.average_speedup
+average_energy_reduction = _macro.average_energy_reduction
+
+
+_DEFAULT = _macro.PAPER_MACRO
+_FORWARDS = {
+    "N_ARRAYS": (lambda: _DEFAULT.n_arrays, "MacroSpec.n_arrays"),
+    "N_PCUS": (lambda: _array.DEFAULT_PCUS, "ArraySpec.pcus"),
+    "POST_NS_PER_OUT": (lambda: _DEFAULT.post_ns_per_out,
+                        "MacroSpec.post_ns_per_out"),
+    "POST_PJ_PER_OUT": (lambda: _DEFAULT.post_pj_per_out,
+                        "MacroSpec.post_pj_per_out"),
+    "WRITE_AMORTIZATION": (lambda: _DEFAULT.write_amortization,
+                           "MacroSpec.write_amortization"),
+    "ISO_AREA_NM_ARRAYS": (lambda: _macro.PAPER_ISO_AREA_NM_ARRAYS,
+                           "repro.hw.iso_area_nm_arrays(array, macro)"),
+    "BENCHMARKS": (lambda: _suite.BENCHMARKS,
+                   "repro.hw.dnn_suite.get_benchmarks()"),
 }
 
-# Calibrated digital post-processing (partial-sum reduce + quantize +
-# activation) throughput, ns and pJ per output element, identical for CiM
-# and NM designs (see module docstring for the calibration procedure).
-POST_NS_PER_OUT = 0.4486
-POST_PJ_PER_OUT = 31.5
 
-# Weight tiles are loaded once and reused across a batch of inferences
-# (weight-stationary steady state, as in the TiM-DNN evaluation); write
-# cost is amortized over this batch. FEMFET is non-volatile, so resident
-# tiles would persist across power cycles as well.
-WRITE_AMORTIZATION = 16
-
-
-@dataclasses.dataclass(frozen=True)
-class GemmLayer:
-    """One DNN layer as a GEMM: out[M, N] = in[M, K] @ w[K, N].
-
-    Convs are im2col-lowered (K = C_in * kh * kw, M = H_out * W_out).
-    RNN steps: K = input + hidden, N = gates * hidden, M = timesteps.
-    """
-    name: str
-    m: int
-    k: int
-    n: int
-
-    @property
-    def macs(self) -> int:
-        return self.m * self.k * self.n
-
-
-def conv(name: str, h_out: int, c_in: int, kh: int, c_out: int, kw: int | None = None) -> GemmLayer:
-    kw = kh if kw is None else kw
-    return GemmLayer(name, h_out * h_out, c_in * kh * kw, c_out)
-
-
-# ---------------------------------------------------------------------------
-# Benchmark workloads (paper Section VI: AlexNet, ResNet34, Inception,
-# LSTM, GRU). Dimensions follow the standard published architectures.
-# ---------------------------------------------------------------------------
-
-def alexnet() -> List[GemmLayer]:
-    return [
-        conv("conv1", 55, 3, 11, 96),
-        conv("conv2", 27, 96, 5, 256),
-        conv("conv3", 13, 256, 3, 384),
-        conv("conv4", 13, 384, 3, 384),
-        conv("conv5", 13, 384, 3, 256),
-        GemmLayer("fc6", 1, 9216, 4096),
-        GemmLayer("fc7", 1, 4096, 4096),
-        GemmLayer("fc8", 1, 4096, 1000),
-    ]
-
-
-def resnet34() -> List[GemmLayer]:
-    layers = [conv("conv1", 112, 3, 7, 64)]
-    stages = [(64, 3, 56), (128, 4, 28), (256, 6, 14), (512, 3, 7)]
-    prev_c = 64
-    for si, (c, blocks, hw) in enumerate(stages):
-        for b in range(blocks):
-            cin = prev_c if b == 0 else c
-            layers.append(conv(f"s{si}b{b}c1", hw, cin, 3, c))
-            layers.append(conv(f"s{si}b{b}c2", hw, c, 3, c))
-            if b == 0 and cin != c:
-                layers.append(conv(f"s{si}b{b}ds", hw, cin, 1, c))
-        prev_c = c
-    layers.append(GemmLayer("fc", 1, 512, 1000))
-    return layers
-
-
-def inception() -> List[GemmLayer]:
-    """GoogLeNet(Inception-v1)-style workload: stem + 9 inception modules."""
-    layers = [
-        conv("stem1", 112, 3, 7, 64),
-        conv("stem2", 56, 64, 3, 192),
-    ]
-    # (hw, c_in, [#1x1, #3x3red, #3x3, #5x5red, #5x5, pool_proj])
-    modules = [
-        (28, 192, (64, 96, 128, 16, 32, 32)),
-        (28, 256, (128, 128, 192, 32, 96, 64)),
-        (14, 480, (192, 96, 208, 16, 48, 64)),
-        (14, 512, (160, 112, 224, 24, 64, 64)),
-        (14, 512, (128, 128, 256, 24, 64, 64)),
-        (14, 512, (112, 144, 288, 32, 64, 64)),
-        (14, 528, (256, 160, 320, 32, 128, 128)),
-        (7, 832, (256, 160, 320, 32, 128, 128)),
-        (7, 832, (384, 192, 384, 48, 128, 128)),
-    ]
-    for i, (hw, cin, (c1, r3, c3, r5, c5, pp)) in enumerate(modules):
-        layers += [
-            conv(f"inc{i}_1x1", hw, cin, 1, c1),
-            conv(f"inc{i}_3x3r", hw, cin, 1, r3),
-            conv(f"inc{i}_3x3", hw, r3, 3, c3),
-            conv(f"inc{i}_5x5r", hw, cin, 1, r5),
-            conv(f"inc{i}_5x5", hw, r5, 5, c5),
-            conv(f"inc{i}_pool", hw, cin, 1, pp),
-        ]
-    layers.append(GemmLayer("fc", 1, 1024, 1000))
-    return layers
-
-
-def lstm(hidden: int = 512, inp: int = 512, steps: int = 100) -> List[GemmLayer]:
-    # 4 gates; input and recurrent GEMMs per step, batched over timesteps.
-    return [
-        GemmLayer("lstm_x", steps, inp, 4 * hidden),
-        GemmLayer("lstm_h", steps, hidden, 4 * hidden),
-        GemmLayer("proj", steps, hidden, inp),
-    ]
-
-
-def gru(hidden: int = 512, inp: int = 512, steps: int = 100) -> List[GemmLayer]:
-    return [
-        GemmLayer("gru_x", steps, inp, 3 * hidden),
-        GemmLayer("gru_h", steps, hidden, 3 * hidden),
-        GemmLayer("proj", steps, hidden, inp),
-    ]
-
-
-BENCHMARKS: Dict[str, List[GemmLayer]] = {}
-
-
-def get_benchmarks() -> Dict[str, List[GemmLayer]]:
-    if not BENCHMARKS:
-        BENCHMARKS.update(
-            AlexNet=alexnet(),
-            ResNet34=resnet34(),
-            Inception=inception(),
-            LSTM=lstm(),
-            GRU=gru(),
+def __getattr__(name: str):
+    if name in _FORWARDS:
+        thunk, repl = _FORWARDS[name]
+        warnings.warn(
+            f"repro.core.accelerator.{name} is deprecated; use {repl}",
+            DeprecationWarning,
+            stacklevel=2,
         )
-    return BENCHMARKS
+        return thunk()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-# ---------------------------------------------------------------------------
-# Execution model
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class SystemResult:
-    benchmark: str
-    tech: str
-    design: str
-    n_arrays: int
-    time_ns: float
-    energy_pj: float
-    macs: int
-
-
-def _layer_cost(layer: GemmLayer, cost: cm.ArrayCost, n_arrays: int) -> Tuple[float, float]:
-    """(time_ns, energy_pj) for one GEMM layer on ``n_arrays`` arrays."""
-    row_tiles = math.ceil(layer.k / cm.N_ROWS)     # weight tiles along K
-    col_tiles = math.ceil(layer.n / cm.N_COLS)     # weight tiles along N
-    tiles = row_tiles * col_tiles
-
-    if cost.design == "NM":
-        # NM: per input vector, each tile streams its rows through the MAC
-        # unit — a full MAC pass per (vector, tile).
-        nm_base = cm.TECH_BASE[cost.tech]
-        pass_ns = cm.CYCLES_PER_MAC_NM * max(nm_base.t_read_ns, nm_base.t_nm_mac_ns)
-        pass_pj = cm.CYCLES_PER_MAC_NM * (nm_base.e_read_pj + nm_base.e_nm_mac_pj)
-    else:
-        pass_ns = cost.mac_pass_ns
-        pass_pj = cost.mac_pass_pj
-
-    total_passes = layer.m * tiles
-    # Weight loading: each tile written once (weight-stationary reuse over
-    # all M vectors and a batch of WRITE_AMORTIZATION inferences); 512
-    # binary rows per 256-row ternary tile.
-    write_rows = tiles * cm.N_ROWS * 2 / WRITE_AMORTIZATION
-    # Arrays work in parallel across tiles and across input vectors.
-    parallel_time = math.ceil(total_passes / n_arrays) * pass_ns
-    write_time = write_rows / n_arrays * cost.row_write_ns
-    post = layer.m * layer.n
-    post_time = post * POST_NS_PER_OUT / (n_arrays * N_PCUS / 8.0)
-
-    time_ns = parallel_time + write_time + post_time
-    energy_pj = (
-        total_passes * pass_pj
-        + write_rows * cost.row_write_pj
-        + post * POST_PJ_PER_OUT
-    )
-    return time_ns, energy_pj
-
-
-def run_system(benchmark: str, tech: str, design: str, n_arrays: int = N_ARRAYS) -> SystemResult:
-    layers = get_benchmarks()[benchmark]
-    cost = cm.array_cost(tech, design)
-    t = e = 0.0
-    macs = 0
-    for layer in layers:
-        lt, le = _layer_cost(layer, cost, n_arrays)
-        t += lt
-        e += le
-        macs += layer.macs
-    return SystemResult(benchmark, tech, design, n_arrays, t, e, macs)
-
-
-def speedup_and_energy(tech: str, design: str, baseline: str = "iso-capacity") -> Dict[str, Dict[str, float]]:
-    """Per-benchmark speedup and energy-reduction of ``design`` vs the NM
-    baseline variant (Figs 12/13)."""
-    assert design in ("CiM-I", "CiM-II")
-    if baseline == "iso-capacity":
-        nm_arrays = N_ARRAYS
-    elif baseline == "iso-area":
-        nm_arrays = ISO_AREA_NM_ARRAYS[design][tech]
-    else:
-        raise ValueError(baseline)
-    out: Dict[str, Dict[str, float]] = {}
-    for bench in get_benchmarks():
-        cim = run_system(bench, tech, design, N_ARRAYS)
-        nm = run_system(bench, tech, "NM", nm_arrays)
-        out[bench] = {
-            "speedup": nm.time_ns / cim.time_ns,
-            "energy_reduction": nm.energy_pj / cim.energy_pj,
-        }
-    return out
-
-
-def average_speedup(tech: str, design: str, baseline: str) -> float:
-    res = speedup_and_energy(tech, design, baseline)
-    vals = [v["speedup"] for v in res.values()]
-    return float(sum(vals) / len(vals))
-
-
-def average_energy_reduction(tech: str, design: str, baseline: str = "iso-capacity") -> float:
-    res = speedup_and_energy(tech, design, baseline)
-    vals = [v["energy_reduction"] for v in res.values()]
-    return float(sum(vals) / len(vals))
-
-
-# Paper-reported system-level averages (Figs 12/13 text) for validation.
-PAPER_SYSTEM_SPEEDUP = {
-    ("CiM-I", "iso-capacity"): {"8T-SRAM": 6.74, "3T-eDRAM": 6.59, "3T-FEMFET": 7.12},
-    ("CiM-I", "iso-area"): {"8T-SRAM": 5.41, "3T-eDRAM": 4.63, "3T-FEMFET": 5.00},
-    ("CiM-II", "iso-capacity"): {"8T-SRAM": 4.90, "3T-eDRAM": 4.78, "3T-FEMFET": 5.06},
-    ("CiM-II", "iso-area"): {"8T-SRAM": 4.21, "3T-eDRAM": 3.85, "3T-FEMFET": 3.99},
-}
-PAPER_SYSTEM_ENERGY = {
-    "CiM-I": {"8T-SRAM": 2.46, "3T-eDRAM": 2.52, "3T-FEMFET": 2.54},
-    "CiM-II": {"8T-SRAM": 2.12, "3T-eDRAM": 2.14, "3T-FEMFET": 2.14},
-}
+def __dir__():
+    return sorted(list(globals()) + list(_FORWARDS))

@@ -1,181 +1,93 @@
-"""Array-level latency / energy / area model for SiTe CiM I/II vs NM.
+"""DEPRECATED compatibility shim — the array-level cost model now lives
+in the declarative hardware API, ``repro.hw`` (DESIGN.md §7).
 
-The paper's Section V reports *normalized* array-level metrics (Figs 9 and
-11) for the three technologies (8T-SRAM, 3T-eDRAM, 3T-FEMFET) and two CiM
-flavors, against near-memory (NM) baselines built from standard 512x256
-binary arrays (= 256x256 ternary words). Those normalized numbers are the
-primary data we reproduce; this module encodes them together with an
-absolute timing/energy scale for the NM baselines (the paper reports only
-normalized values; the absolute scale is an assumption, documented, and
-only affects absolute — never relative — system results).
+Every legacy name forwards to its ``repro.hw`` equivalent and emits a
+``DeprecationWarning`` on first touch:
 
-Conventions:
-  * "cim" metrics are per MAC pass of a full 256-row column set:
-    NM = 256 sequential row reads + digital MAC; CiM I/II = 16 array
-    cycles (16 rows per cycle for I; one row per each of the 16 blocks per
-    cycle for II).
-  * all ``*_vs_nm`` numbers are ratios normalized to the same-technology NM
-    baseline (1.0), straight from the paper's Figs 9/11 and Section V text.
+  * ``TECHNOLOGIES`` / ``DESIGNS``          -> ``hw.PAPER_TECHNOLOGIES`` /
+    ``hw.PAPER_DESIGNS`` (the *registered* sets are ``hw.technologies()``
+    / ``hw.designs()`` — new technologies land there, never here),
+  * ``ArrayMetrics`` / ``ARRAY_METRICS``    -> ``hw.DesignMetrics`` /
+    ``hw.design_metrics(tech, design)``,
+  * ``TechBase`` / ``TECH_BASE``            -> ``hw.TechnologySpec`` /
+    ``hw.get_technology(name)``,
+  * ``array_cost(tech, design)``            -> ``hw.array_cost(ArraySpec)``,
+  * ``paper_validation_table`` / ``flavor_comparison`` — unchanged
+    output, now derived through the registries.
+
+Geometry constants (N_ROWS, N_COLS, N_ACTIVE, CYCLES_PER_MAC_*) forward
+to the ``ArraySpec`` defaults.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Dict
 
-TECHNOLOGIES = ("8T-SRAM", "3T-eDRAM", "3T-FEMFET")
-DESIGNS = ("NM", "CiM-I", "CiM-II")
+from repro.hw import array as _arr
+from repro.hw import registry as _reg
 
-N_ROWS = 256
-N_COLS = 256
-N_ACTIVE = 16
-CYCLES_PER_MAC_CIM = N_ROWS // N_ACTIVE  # 16 cycles, both flavors
-CYCLES_PER_MAC_NM = N_ROWS               # row-by-row readout
-
-
-@dataclasses.dataclass(frozen=True)
-class ArrayMetrics:
-    """Normalized-to-NM array metrics for one (technology, design)."""
-    cim_latency_vs_nm: float      # full MAC pass latency ratio
-    cim_energy_vs_nm: float       # full MAC pass energy ratio
-    read_latency_vs_nm: float
-    read_energy_vs_nm: float
-    write_latency_vs_nm: float
-    write_energy_vs_nm: float
-    cell_area_vs_nm: float        # ternary cell area ratio
-    macro_area_vs_nm: float       # incl. peripherals (ADCs vs NM MAC unit)
+# re-exported types (no warning: harmless to name in annotations)
+ArrayMetrics = _reg.DesignMetrics
+TechBase = _reg.TechnologySpec
+ArrayCost = _arr.ArrayCost
 
 
-# --- Paper Fig. 9 (SiTe CiM I) -------------------------------------------
-# "~88% lower latency" for all three technologies; energy savings 74 / 78 /
-# 78%; read energy +22/24/17%, read latency +7/7/19%; write latency
-# +4/4/10%, write energy comparable; cell area +18/34/34%; macro area
-# 1.3x-1.53x (SRAM at the low end — its baseline cell is largest, so the
-# relative ADC overhead is smallest... the paper gives the range; the
-# per-tech split below is our documented assumption within that range).
-_CIM_I: Dict[str, ArrayMetrics] = {
-    "8T-SRAM": ArrayMetrics(0.12, 0.26, 1.07, 1.22, 1.04, 1.00, 1.18, 1.30),
-    "3T-eDRAM": ArrayMetrics(0.12, 0.22, 1.07, 1.24, 1.04, 1.00, 1.34, 1.53),
-    "3T-FEMFET": ArrayMetrics(0.12, 0.22, 1.19, 1.17, 1.10, 1.00, 1.34, 1.53),
-}
-
-# --- Paper Fig. 11 (SiTe CiM II) -------------------------------------------
-# MAC delay improvements 80 / 78 / 84%; energy 61 / 63 / 62%; read speed
-# 2.4X / 2.6X / 1.8X lower; read energy +74/44/79%; write latency
-# +8/10/3%; cell area +6% for all; macro area 1.21x-1.33x.
-_CIM_II: Dict[str, ArrayMetrics] = {
-    "8T-SRAM": ArrayMetrics(0.20, 0.39, 2.40, 1.74, 1.08, 1.00, 1.06, 1.21),
-    "3T-eDRAM": ArrayMetrics(0.22, 0.37, 2.60, 1.44, 1.10, 1.00, 1.06, 1.33),
-    "3T-FEMFET": ArrayMetrics(0.16, 0.38, 1.80, 1.79, 1.03, 1.00, 1.06, 1.33),
-}
-
-_NM = ArrayMetrics(1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0)
-
-ARRAY_METRICS: Dict[str, Dict[str, ArrayMetrics]] = {
-    tech: {"NM": _NM, "CiM-I": _CIM_I[tech], "CiM-II": _CIM_II[tech]}
-    for tech in TECHNOLOGIES
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class TechBase:
-    """Absolute NM-baseline scale per technology (assumed, documented).
-
-    t_read_ns: one row read (256 bit-cell pairs sensed in parallel).
-    e_read_pj: energy of that row read.
-    t_write_ns / e_write_pj: one row write.
-    t_nm_mac_ns / e_nm_mac_pj: digital near-memory MAC of one 256-wide row
-      against the input element (pipelined with the next read in the NM
-      design; we keep it explicit for energy).
-    """
-    t_read_ns: float
-    e_read_pj: float
-    t_write_ns: float
-    e_write_pj: float
-    t_nm_mac_ns: float
-    e_nm_mac_pj: float
-    leakage_mw: float  # array standby power (0 for NVM)
-
-
-TECH_BASE: Dict[str, TechBase] = {
-    # 45nm PTM class numbers; SRAM fastest read, FEMFET slow high-voltage
-    # write (-5V reset / +4.8V set), eDRAM in between. NVM has no standby
-    # leakage (paper Section II.C).
-    "8T-SRAM": TechBase(1.0, 12.0, 1.0, 14.0, 1.2, 22.0, 1.5),
-    "3T-eDRAM": TechBase(1.3, 10.0, 1.1, 11.0, 1.2, 22.0, 0.8),
-    "3T-FEMFET": TechBase(1.5, 10.0, 8.0, 30.0, 1.2, 22.0, 0.0),
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class ArrayCost:
-    """Absolute per-operation array costs, derived from TECH_BASE x ratios."""
-    tech: str
-    design: str
-    mac_pass_ns: float     # one full 256-row x 256-col ternary MAC pass
-    mac_pass_pj: float
-    row_read_ns: float
-    row_read_pj: float
-    row_write_ns: float
-    row_write_pj: float
-    cell_area: float       # relative units (NM ternary cell of tech = 1.0)
-    macro_area: float
-
-    @property
-    def macs_per_pass(self) -> int:
-        return N_ROWS * N_COLS
-
-
-def array_cost(tech: str, design: str) -> ArrayCost:
-    base = TECH_BASE[tech]
-    m = ARRAY_METRICS[tech][design]
-    # NM MAC pass: 256 row reads + digital MACs (read/compute pipelined, so
-    # latency is dominated by reads; energy adds both).
-    nm_mac_ns = CYCLES_PER_MAC_NM * max(base.t_read_ns, base.t_nm_mac_ns)
-    nm_mac_pj = CYCLES_PER_MAC_NM * (base.e_read_pj + base.e_nm_mac_pj)
-    return ArrayCost(
-        tech=tech,
-        design=design,
-        mac_pass_ns=nm_mac_ns * m.cim_latency_vs_nm,
-        mac_pass_pj=nm_mac_pj * m.cim_energy_vs_nm,
-        row_read_ns=base.t_read_ns * m.read_latency_vs_nm,
-        row_read_pj=base.e_read_pj * m.read_energy_vs_nm,
-        row_write_ns=base.t_write_ns * m.write_latency_vs_nm,
-        row_write_pj=base.e_write_pj * m.write_energy_vs_nm,
-        cell_area=m.cell_area_vs_nm,
-        macro_area=m.macro_area_vs_nm,
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.core.cost_model.{name} is deprecated; use {repl}",
+        DeprecationWarning,
+        stacklevel=3,
     )
 
 
+def array_cost(tech: str, design: str) -> ArrayCost:
+    """Forward to ``hw.array_cost`` on a default-geometry ArraySpec."""
+    return _arr.array_cost(_arr.ArraySpec(technology=tech, design=design))
+
+
 def paper_validation_table() -> Dict[str, Dict[str, Dict[str, float]]]:
-    """The claims of Figs 9/11 as derived from this model — what tests and
-    EXPERIMENTS.md compare against the paper's text."""
-    out: Dict[str, Dict[str, Dict[str, float]]] = {}
-    for tech in TECHNOLOGIES:
-        out[tech] = {}
-        for design in ("CiM-I", "CiM-II"):
-            nm = array_cost(tech, "NM")
-            c = array_cost(tech, design)
-            out[tech][design] = {
-                "cim_latency_reduction_pct": 100.0 * (1 - c.mac_pass_ns / nm.mac_pass_ns),
-                "cim_energy_reduction_pct": 100.0 * (1 - c.mac_pass_pj / nm.mac_pass_pj),
-                "read_energy_overhead_pct": 100.0 * (c.row_read_pj / nm.row_read_pj - 1),
-                "read_latency_overhead_pct": 100.0 * (c.row_read_ns / nm.row_read_ns - 1),
-                "write_latency_overhead_pct": 100.0 * (c.row_write_ns / nm.row_write_ns - 1),
-                "cell_area_overhead_pct": 100.0 * (c.cell_area - 1),
-                "macro_area_ratio": c.macro_area,
-            }
-    return out
+    return _arr.paper_validation_table()
 
 
 def flavor_comparison() -> Dict[str, Dict[str, float]]:
-    """Section V.3: CiM II vs CiM I energy/latency/area ratios."""
-    out = {}
-    for tech in TECHNOLOGIES:
-        c1 = array_cost(tech, "CiM-I")
-        c2 = array_cost(tech, "CiM-II")
-        out[tech] = {
-            "energy_II_over_I": c2.mac_pass_pj / c1.mac_pass_pj,
-            "latency_II_over_I": c2.mac_pass_ns / c1.mac_pass_ns,
-            "cell_area_II_over_I": c2.cell_area / c1.cell_area,
-        }
-    return out
+    return _arr.flavor_comparison()
+
+
+def _legacy_array_metrics() -> Dict[str, Dict[str, ArrayMetrics]]:
+    return {
+        tech: {d: _reg.design_metrics(tech, d) for d in _reg.PAPER_DESIGNS}
+        for tech in _reg.PAPER_TECHNOLOGIES
+    }
+
+
+_FORWARDS = {
+    "TECHNOLOGIES": (lambda: _reg.PAPER_TECHNOLOGIES,
+                     "repro.hw.technologies() (registered set) or "
+                     "hw.PAPER_TECHNOLOGIES (paper set)"),
+    "DESIGNS": (lambda: _reg.PAPER_DESIGNS, "repro.hw.designs()"),
+    "N_ROWS": (lambda: _arr.DEFAULT_ROWS, "ArraySpec.rows"),
+    "N_COLS": (lambda: _arr.DEFAULT_COLS, "ArraySpec.cols"),
+    "N_ACTIVE": (lambda: _arr.DEFAULT_N_ACTIVE, "ArraySpec.n_active"),
+    "CYCLES_PER_MAC_CIM": (
+        lambda: _arr.DEFAULT_ROWS // _arr.DEFAULT_N_ACTIVE,
+        "ArraySpec.cycles_per_pass"),
+    "CYCLES_PER_MAC_NM": (lambda: _arr.DEFAULT_ROWS,
+                          "ArraySpec.cycles_per_pass"),
+    "ARRAY_METRICS": (_legacy_array_metrics,
+                      "repro.hw.design_metrics(tech, design)"),
+    "TECH_BASE": (
+        lambda: {t: _reg.get_technology(t) for t in _reg.PAPER_TECHNOLOGIES},
+        "repro.hw.get_technology(name)"),
+}
+
+
+def __getattr__(name: str):
+    if name in _FORWARDS:
+        thunk, repl = _FORWARDS[name]
+        _warn(name, repl)
+        return thunk()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_FORWARDS))

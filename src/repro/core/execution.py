@@ -536,37 +536,69 @@ register_backend("fused/jnp/none", _fused_jnp, clamps=False)
 
 
 # ---------------------------------------------------------------------------
-# Spec -> array-cost-model mapping (paper Section V / core/cost_model.py)
+# Spec -> hardware-model mapping (paper Section V / repro.hw)
 # ---------------------------------------------------------------------------
 
 
 def spec_design(spec: CiMExecSpec) -> str:
-    """Map an execution spec onto the paper's array designs. "exact" is
-    the near-memory baseline; every CiM formulation — including "fused",
-    the Pallas kernel's cost stand-in — executes on a SiTe array, flavor
-    choosing I vs II. Unknown (plugged-in) formulations fall back on
-    whether they clamp."""
+    """Map an execution spec onto the registered array designs. "exact"
+    is the near-memory baseline; every CiM formulation — including
+    "fused", the Pallas kernel's cost stand-in — executes on a SiTe
+    array, flavor choosing the design through the ``repro.hw`` design
+    registry. Unknown (plugged-in) formulations fall back on whether
+    they clamp."""
     if spec.formulation == "exact":
         return "NM"
     if spec.formulation in FORMULATIONS or spec.clamps:
-        return "CiM-II" if spec.flavor == "II" else "CiM-I"
+        from repro.hw import design_for_flavor
+
+        return design_for_flavor(spec.flavor)
     return "NM"
 
 
-def spec_array_cost(spec: CiMExecSpec, tech: str = "8T-SRAM"):
+def _bind_array(spec: CiMExecSpec, tech, array):
+    """Bind an execution spec to a concrete ArraySpec: the ArraySpec
+    supplies technology and geometry, the *execution* spec decides the
+    design (an "exact" spec costs as the NM baseline of that array no
+    matter how the ArraySpec was labelled). Without an array, a
+    default-geometry array on ``tech`` (default 8T-SRAM). ``tech`` and
+    ``array`` are mutually exclusive — the ArraySpec already names its
+    technology, so accepting both would silently ignore one."""
+    from repro import hw
+
+    design = spec_design(spec)
+    if array is None:
+        return hw.ArraySpec(technology=tech or "8T-SRAM", design=design)
+    if tech is not None:
+        raise ValueError(
+            f"pass either tech= or array=, not both (array already "
+            f"names technology {array.technology!r}, got tech={tech!r})"
+        )
+    return array.with_design(design)
+
+
+def spec_array_cost(spec: CiMExecSpec, tech=None, array=None):
     """Absolute array-level cost (latency/energy/area) of executing this
-    spec on ``tech`` — the dry-run/roofline's bridge from the execution
-    API to the paper's Figs 9/11 cost model."""
-    from repro.core import cost_model as cm
+    spec — the dry-run/roofline's bridge from the execution API to the
+    hardware model (``repro.hw``). See :func:`_bind_array` for how the
+    optional ``tech`` (technology name, default 8T-SRAM) / ``array``
+    (an :class:`repro.hw.ArraySpec`) binding works."""
+    from repro import hw
 
-    return cm.array_cost(tech, spec_design(spec))
+    return hw.array_cost(_bind_array(spec, tech, array))
 
 
-def spec_cost_summary(spec: CiMExecSpec, tech: str = "8T-SRAM") -> Dict[str, float]:
-    cost = spec_array_cost(spec, tech)
+def spec_cost_summary(
+    spec: CiMExecSpec, tech=None, array=None
+) -> Dict[str, float]:
+    from repro import hw
+
+    bound = _bind_array(spec, tech, array)
+    cost = hw.array_cost(bound)
     return {
         "tech": cost.tech,
         "design": cost.design,
+        "array": bound.name,
         "mac_pass_ns": cost.mac_pass_ns,
         "mac_pass_pj": cost.mac_pass_pj,
         "macro_area_vs_nm": cost.macro_area,

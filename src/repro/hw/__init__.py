@@ -1,0 +1,70 @@
+"""``repro.hw`` — the declarative hardware API (DESIGN.md §7).
+
+Mirror of the execution API: where ``repro.core.execution`` makes the
+ternary-MAC *semantics* data (``CiMExecSpec`` + backend registry), this
+package makes the *hardware* data —
+
+  * :class:`ArraySpec` — one memory array (technology, design,
+    geometry), validated against the technology / design registries,
+  * :func:`register_technology` / :func:`register_design` — new memory
+    cells (RRAM ternary synapses, ...) land as one registration of cost
+    parameters; every consumer (bench_array, ``api.spec_cost_summary``,
+    dry-run/roofline cells, the system projection) picks them up with
+    zero edits,
+  * :class:`MacroSpec` + the TiM-DNN-style system model (``hw.macro``),
+  * :func:`project` — the repo's own registry architectures
+    (transformer / SSM / hybrid / MoE / encdec / VLM) run through the
+    accelerator model (``hw.workload``),
+  * the paper's Figs 9/11 claims derived — not stored — and pinned as a
+    validation table (``hw.array.paper_validation_table``).
+
+``core/cost_model.py`` and ``core/accelerator.py`` are deprecated
+compatibility shims over this package.
+"""
+from repro.hw.array import (  # noqa: F401
+    ArrayCost,
+    ArraySpec,
+    array_cost,
+    design_claims,
+    flavor_comparison,
+    paper_validation_table,
+    parse_array_spec,
+)
+from repro.hw.macro import (  # noqa: F401
+    GemmLayer,
+    MacroSpec,
+    PAPER_MACRO,
+    PAPER_SYSTEM_ENERGY,
+    PAPER_SYSTEM_SPEEDUP,
+    SystemResult,
+    average_energy_reduction,
+    average_speedup,
+    iso_area_nm_arrays,
+    layer_cost,
+    run_layers,
+    run_system,
+    speedup_and_energy,
+)
+from repro.hw.registry import (  # noqa: F401
+    PAPER_DESIGNS,
+    PAPER_TECHNOLOGIES,
+    DesignMetrics,
+    DesignSpec,
+    TechnologySpec,
+    cim_designs_of,
+    design_for_flavor,
+    design_metrics,
+    designs,
+    get_design,
+    get_technology,
+    register_design,
+    register_technology,
+    technologies,
+    unregister_technology,
+)
+from repro.hw.workload import (  # noqa: F401
+    WeightGemm,
+    arch_gemms,
+    project,
+    workload_layers,
+)

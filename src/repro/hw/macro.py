@@ -1,0 +1,246 @@
+"""``MacroSpec`` + TiM-DNN-style system model (paper Section VI),
+generalized over :class:`repro.hw.array.ArraySpec`.
+
+Maps GEMM workloads onto a macro of arrays and derives execution time
+and energy. With the default paper macro (32 arrays of 256x256 ternary
+cells, 32 PCUs per array) and the paper's DNN suite
+(``repro.hw.dnn_suite``) this reproduces Figs 12/13; with
+``repro.hw.workload`` it projects the repo's own registry architectures.
+
+Model structure:
+
+  * N_A = 16 rows asserted per cycle -> 16 cycles per full-column MAC
+    pass; column partials are drained ``pcus`` at a time, so a pass
+    takes ceil(cols/pcus) PCU drain slots overlapped with compute,
+  * NM baselines: iso-capacity (same array count) and iso-area (more
+    arrays; the paper's Section VI.A counts are pinned per (design,
+    tech) as *calibration*, any other technology derives its count from
+    its macro-area ratio),
+  * weight reloading: layers larger than macro capacity are processed
+    in weight tiles; writing a tile costs row writes, amortized over a
+    weight-stationary batch,
+  * a fixed per-output post-processing cost (quantization + activation
+    in the digital periphery) identical across designs — the Amdahl
+    term that brings the raw ~8.3x array-level CiM I advantage down to
+    the ~6.6-7.1x system-level speedups the paper reports.
+
+The post-processing rate is the single calibration constant; it was
+fitted once so the 8T-SRAM CiM I iso-capacity average lands near the
+paper's 6.74x, and then *everything else* (other technologies, flavors,
+iso-area baselines, energy ratios) is a prediction of the model that
+EXPERIMENTS.md compares against the paper's numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.hw.array import ArrayCost, ArraySpec, array_cost
+
+# Iso-area NM baseline array counts (paper Section VI.A) — pinned
+# calibration for the paper's six (design, tech) pairs.
+PAPER_ISO_AREA_NM_ARRAYS: Dict[str, Dict[str, int]] = {
+    "CiM-I": {"8T-SRAM": 41, "3T-eDRAM": 48, "3T-FEMFET": 47},
+    "CiM-II": {"8T-SRAM": 38, "3T-eDRAM": 42, "3T-FEMFET": 41},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroSpec:
+    """Accelerator-level sizing and post-processing constants.
+
+    n_arrays:           arrays in the macro (paper: 32 -> 2M ternary
+                        words / 512 kB).
+    post_ns_per_out /   calibrated digital post-processing (partial-sum
+    post_pj_per_out:    reduce + quantize + activation) cost per output
+                        element, identical for CiM and NM designs; the
+                        time is per-cycle at the array's ``clock_ghz``.
+    write_amortization: weight tiles are loaded once and reused across a
+                        batch of inferences (weight-stationary steady
+                        state, as in the TiM-DNN evaluation); write cost
+                        is amortized over this batch. FEMFET is
+                        non-volatile, so resident tiles persist across
+                        power cycles as well.
+    iso_area_pins:      (design -> tech -> NM array count) calibration
+                        table for iso-area baselines; technologies not
+                        pinned derive their count from the macro-area
+                        ratio (:func:`iso_area_nm_arrays`).
+    """
+    n_arrays: int = 32
+    post_ns_per_out: float = 0.4486
+    post_pj_per_out: float = 31.5
+    write_amortization: int = 16
+    iso_area_pins: Mapping[str, Mapping[str, int]] = dataclasses.field(
+        default_factory=lambda: PAPER_ISO_AREA_NM_ARRAYS
+    )
+
+
+PAPER_MACRO = MacroSpec()
+
+
+def iso_area_nm_arrays(array: ArraySpec, macro: MacroSpec = PAPER_MACRO) -> int:
+    """NM arrays fitting the CiM macro's silicon area: the paper's
+    pinned counts where available, else derived from the design's
+    macro-area ratio on this technology. The pins were measured at the
+    paper's 32-array macro — a differently sized macro always derives
+    (an iso-area NM baseline must have at least as many arrays as the
+    CiM macro it matches, since CiM macro area > NM)."""
+    if macro.n_arrays == PAPER_MACRO.n_arrays:
+        pinned = macro.iso_area_pins.get(array.design, {}).get(array.technology)
+        if pinned is not None:
+            return pinned
+    return max(macro.n_arrays, int(macro.n_arrays * array_cost(array).macro_area))
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmLayer:
+    """One DNN layer as a GEMM: out[M, N] = in[M, K] @ w[K, N].
+
+    Convs are im2col-lowered (K = C_in * kh * kw, M = H_out * W_out).
+    RNN steps: K = input + hidden, N = gates * hidden, M = timesteps.
+    """
+    name: str
+    m: int
+    k: int
+    n: int
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+
+def conv(name: str, h_out: int, c_in: int, kh: int, c_out: int,
+         kw: Optional[int] = None) -> GemmLayer:
+    kw = kh if kw is None else kw
+    return GemmLayer(name, h_out * h_out, c_in * kh * kw, c_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemResult:
+    benchmark: str
+    tech: str
+    design: str
+    n_arrays: int
+    time_ns: float
+    energy_pj: float
+    macs: int
+
+
+def layer_cost(layer: GemmLayer, array: ArraySpec, n_arrays: int,
+               macro: MacroSpec = PAPER_MACRO,
+               cost: Optional[ArrayCost] = None) -> Tuple[float, float]:
+    """(time_ns, energy_pj) for one GEMM layer on ``n_arrays`` arrays of
+    ``array``'s kind. ``cost`` short-circuits the per-call derivation
+    when the caller already holds it (hot loop over many layers)."""
+    cost = array_cost(array) if cost is None else cost
+    row_tiles = math.ceil(layer.k / array.rows)     # weight tiles along K
+    col_tiles = math.ceil(layer.n / array.cols)     # weight tiles along N
+    tiles = row_tiles * col_tiles
+
+    total_passes = layer.m * tiles
+    # Weight loading: each tile written once (weight-stationary reuse
+    # over all M vectors and a batch of write_amortization inferences);
+    # two binary rows per ternary row.
+    write_rows = tiles * array.rows * 2 / macro.write_amortization
+    # Arrays work in parallel across tiles and across input vectors.
+    parallel_time = math.ceil(total_passes / n_arrays) * cost.mac_pass_ns
+    write_time = write_rows / n_arrays * cost.row_write_ns
+    post = layer.m * layer.n
+    drain_slots = math.ceil(array.cols / array.pcus)
+    post_ns = macro.post_ns_per_out / array.clock_ghz
+    post_time = post * post_ns / (n_arrays * array.pcus / float(drain_slots))
+
+    time_ns = parallel_time + write_time + post_time
+    energy_pj = (
+        total_passes * cost.mac_pass_pj
+        + write_rows * cost.row_write_pj
+        + post * macro.post_pj_per_out
+    )
+    return time_ns, energy_pj
+
+
+def run_layers(name: str, layers: Sequence[GemmLayer], array: ArraySpec,
+               macro: MacroSpec = PAPER_MACRO,
+               n_arrays: Optional[int] = None) -> SystemResult:
+    """Execute a GEMM workload on a macro of ``array``s."""
+    n_arrays = macro.n_arrays if n_arrays is None else n_arrays
+    cost = array_cost(array)
+    t = e = 0.0
+    macs = 0
+    for layer in layers:
+        lt, le = layer_cost(layer, array, n_arrays, macro, cost=cost)
+        t += lt
+        e += le
+        macs += layer.macs
+    return SystemResult(name, array.technology, array.design, n_arrays,
+                        t, e, macs)
+
+
+def run_system(benchmark: str, tech: str, design: str,
+               n_arrays: Optional[int] = None,
+               macro: MacroSpec = PAPER_MACRO) -> SystemResult:
+    """Paper-suite entry point (Figs 12/13): run one named DNN benchmark
+    on the default-geometry array of (tech, design)."""
+    from repro.hw import dnn_suite
+
+    layers = dnn_suite.get_benchmarks()[benchmark]
+    array = ArraySpec(technology=tech, design=design)
+    return run_layers(benchmark, layers, array, macro, n_arrays)
+
+
+def speedup_and_energy(tech: str, design: str, baseline: str = "iso-capacity",
+                       macro: MacroSpec = PAPER_MACRO) -> Dict[str, Dict[str, float]]:
+    """Per-benchmark speedup and energy-reduction of ``design`` vs the
+    NM baseline variant (Figs 12/13). Works for any registered
+    technology — non-paper techs derive their iso-area sizing."""
+    from repro.hw import dnn_suite
+
+    from repro.hw import registry as reg
+
+    if not reg.get_design(design).cim:
+        raise ValueError(f"compare a CiM design against NM, not {design!r}")
+    array = ArraySpec(technology=tech, design=design)
+    if baseline == "iso-capacity":
+        nm_arrays = macro.n_arrays
+    elif baseline == "iso-area":
+        nm_arrays = iso_area_nm_arrays(array, macro)
+    else:
+        raise ValueError(baseline)
+    out: Dict[str, Dict[str, float]] = {}
+    for bench in dnn_suite.get_benchmarks():
+        cim = run_system(bench, tech, design, macro.n_arrays, macro)
+        nm = run_system(bench, tech, "NM", nm_arrays, macro)
+        out[bench] = {
+            "speedup": nm.time_ns / cim.time_ns,
+            "energy_reduction": nm.energy_pj / cim.energy_pj,
+        }
+    return out
+
+
+def average_speedup(tech: str, design: str, baseline: str,
+                    macro: MacroSpec = PAPER_MACRO) -> float:
+    res = speedup_and_energy(tech, design, baseline, macro)
+    vals = [v["speedup"] for v in res.values()]
+    return float(sum(vals) / len(vals))
+
+
+def average_energy_reduction(tech: str, design: str,
+                             baseline: str = "iso-capacity",
+                             macro: MacroSpec = PAPER_MACRO) -> float:
+    res = speedup_and_energy(tech, design, baseline, macro)
+    vals = [v["energy_reduction"] for v in res.values()]
+    return float(sum(vals) / len(vals))
+
+
+# Paper-reported system-level averages (Figs 12/13 text) for validation.
+PAPER_SYSTEM_SPEEDUP = {
+    ("CiM-I", "iso-capacity"): {"8T-SRAM": 6.74, "3T-eDRAM": 6.59, "3T-FEMFET": 7.12},
+    ("CiM-I", "iso-area"): {"8T-SRAM": 5.41, "3T-eDRAM": 4.63, "3T-FEMFET": 5.00},
+    ("CiM-II", "iso-capacity"): {"8T-SRAM": 4.90, "3T-eDRAM": 4.78, "3T-FEMFET": 5.06},
+    ("CiM-II", "iso-area"): {"8T-SRAM": 4.21, "3T-eDRAM": 3.85, "3T-FEMFET": 3.99},
+}
+PAPER_SYSTEM_ENERGY = {
+    "CiM-I": {"8T-SRAM": 2.46, "3T-eDRAM": 2.52, "3T-FEMFET": 2.54},
+    "CiM-II": {"8T-SRAM": 2.12, "3T-eDRAM": 2.14, "3T-FEMFET": 2.14},
+}

@@ -111,7 +111,14 @@ def lower_cell(
     cfg_overrides: Optional[dict] = None,
     quant_overrides: Optional[dict] = None,
     fsdp: bool = False,
+    array_spec=None,
 ) -> CellResult:
+    # resolve the hardware binding first: a typo'd --array-spec dies with
+    # the registered sets listed, before any compile work
+    from repro import hw
+
+    if isinstance(array_spec, str):
+        array_spec = hw.parse_array_spec(array_spec)
     cfg = get_config(arch)
     if quant_mode is not None:
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, mode=quant_mode))
@@ -216,14 +223,16 @@ def lower_cell(
         # launch/hlo_analysis.py for why compiled.cost_analysis() cannot
         # be used on this backend).
         hc = hlo_analysis.analyze(hlo, chips)
-        # execution-spec -> paper cost-model mapping: which array design
-        # (NM / CiM-I / CiM-II) this cell's MACs would execute on, with
-        # the Figs 9/11-calibrated per-MAC-pass cost attached.
+        # execution-spec -> hardware mapping: which array design (NM /
+        # CiM-I / CiM-II) this cell's MACs would execute on — bound to
+        # the --array-spec hardware when given — with the Figs
+        # 9/11-calibrated per-MAC-pass cost attached.
         cim_array = None
         if cfg.quant.mode != "off":
             from repro.core import execution as xapi
 
-            cim_array = xapi.spec_cost_summary(cfg.quant.resolved_spec())
+            cim_array = xapi.spec_cost_summary(
+                cfg.quant.resolved_spec(), array=array_spec)
         roof = rl.Roofline(
             arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
             flops=hc.flops * chips,            # whole-job FLOPs
@@ -232,6 +241,7 @@ def lower_cell(
             coll_breakdown=dict(hc.coll),
             model_flops=rl.model_flops_estimate(cfg, shape, shape.kind),
             cim_array=cim_array,
+            array_spec=None if array_spec is None else array_spec.name,
         )
         res = CellResult(
             arch, shape_name, mesh_name, ok=True, seconds=time.time() - t0,
@@ -262,8 +272,21 @@ def main(argv=None):
     ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
     ap.add_argument("--quant", default=None,
                     choices=[None, "off", "ternary", "cim", "cim_fused"])
+    ap.add_argument("--array-spec", default=None,
+                    help="hardware binding for cost cells: "
+                         "TECH[/DESIGN][/RxC][/aN][/pP], e.g. 3T-FEMFET/CiM-I "
+                         "(see repro.hw; design is overridden by the "
+                         "cell's execution spec)")
     ap.add_argument("--out", default=None, help="directory for per-cell JSON")
     args = ap.parse_args(argv)
+
+    if args.array_spec is not None:
+        from repro import hw
+
+        try:
+            hw.parse_array_spec(args.array_spec)
+        except ValueError as e:
+            ap.error(f"bad --array-spec: {e}")
 
     from repro.models.registry import ARCH_IDS
 
@@ -275,7 +298,8 @@ def main(argv=None):
     for arch in archs:
         for shape in shapes:
             for mp in pods:
-                res = lower_cell(arch, shape, multi_pod=mp, quant_mode=args.quant)
+                res = lower_cell(arch, shape, multi_pod=mp, quant_mode=args.quant,
+                                 array_spec=args.array_spec)
                 cells.append(res)
                 failures += 0 if res.ok else 1
                 if args.out:

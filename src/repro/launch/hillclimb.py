@@ -30,10 +30,34 @@ def main(argv=None):
     ap.add_argument("--quant", default=None)
     ap.add_argument("--cfg", default=None, help="JSON ArchConfig overrides")
     ap.add_argument("--qc", default=None, help="JSON QuantConfig overrides")
+    ap.add_argument("--array-spec", default=None,
+                    help="hardware binding: TECH[/DESIGN][/RxC][/aN][/pP] "
+                         "(e.g. 3T-FEMFET/CiM-I); recorded in the "
+                         "roofline JSON so perf cells say what hardware "
+                         "they were costed on")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--out", default="results/perf")
     args = ap.parse_args(argv)
+
+    # Validate registry-facing arguments up front with the valid sets in
+    # the message — an unknown arch used to die as a bare KeyError deep
+    # inside importlib, an unknown shape as a KeyError in SHAPES.
+    from repro.models.registry import ARCH_IDS, SHAPES
+
+    if args.arch not in ARCH_IDS:
+        ap.error(f"unknown --arch {args.arch!r}; registered archs: "
+                 f"{', '.join(ARCH_IDS)}")
+    if args.shape not in SHAPES:
+        ap.error(f"unknown --shape {args.shape!r}; registered shapes: "
+                 f"{', '.join(SHAPES)}")
+    if args.array_spec is not None:
+        from repro import hw
+
+        try:
+            hw.parse_array_spec(args.array_spec)
+        except ValueError as e:
+            ap.error(f"bad --array-spec: {e}")
 
     from repro.launch.dryrun import lower_cell
 
@@ -45,6 +69,7 @@ def main(argv=None):
         cfg_overrides=json.loads(args.cfg) if args.cfg else None,
         quant_overrides=json.loads(args.qc) if args.qc else None,
         fsdp=args.fsdp,
+        array_spec=args.array_spec,
     )
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.name}.json")

@@ -110,9 +110,12 @@ class Roofline:
     coll_breakdown: Dict[str, float]
     model_flops: float          # 6*N*D (or 6*N_active*D) useful flops
     bytes_per_device: Optional[float] = None
-    # execution-spec -> array-design cost mapping (core/cost_model.py via
+    # execution-spec -> array-design cost mapping (repro.hw via
     # repro.core.execution.spec_cost_summary); None for fp cells
     cim_array: Optional[Dict[str, float]] = None
+    # canonical name of the ArraySpec the cell was costed on (None when
+    # no --array-spec binding was given — default-geometry 8T-SRAM)
+    array_spec: Optional[str] = None
 
     @property
     def t_compute(self) -> float:
@@ -162,6 +165,7 @@ class Roofline:
             "useful_flops_ratio": self.useful_flops_ratio,
             "bytes_per_device": self.bytes_per_device,
             "cim_array": self.cim_array,
+            "array_spec": self.array_spec,
         }
 
 
