@@ -25,13 +25,26 @@ what the fused path removes.
 Emits ``BENCH_serve.json`` (CI uploads it as a workflow artifact; the
 bench-smoke job fails if the file is missing or malformed).
 
+``--tp N`` adds a tensor-parallel row: the same fused workload served
+over an N-device ("data", "model") mesh (params/caches sharded by
+``repro.dist.sharding``). On CPU the devices are virtual — forced below,
+before the first jax import — so the row measures the *serving
+discipline under sharding* (token identity, decode steps, host-sync
+counts survive TP; see tests/test_tp_serve.py), not real TP speedup.
+
 Runs the smoke config by default (matching the ``benchmarks.run``
 harness, and CPU-feasible); ``--full`` opts into the full arch config.
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.bench_serve [--full] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.bench_serve [--full] [--tp N] [--out PATH]
 """
 from __future__ import annotations
+
+import sys
+
+from repro.launch._boot import force_host_devices_for_tp
+
+force_host_devices_for_tp(sys.argv)  # before the jax import below
 
 import argparse
 import json
@@ -57,10 +70,10 @@ def _workload(cfg, n_requests: int, max_new: int):
 
 
 def _run_mode(params, cfg, fused: bool, n_slots: int, s_max: int,
-              n_requests: int, max_new: int):
+              n_requests: int, max_new: int, mesh=None):
     t0 = time.perf_counter()
     batcher = ContinuousBatcher(params, cfg, n_slots=n_slots, s_max=s_max,
-                                fused=fused)
+                                fused=fused, mesh=mesh)
     # warm with the full workload once so the measured pass is steady-state
     # for BOTH modes (the looped baseline recompiles prefill per distinct
     # prompt length — charged to compile_s here, not to tok_s)
@@ -79,7 +92,8 @@ def _run_mode(params, cfg, fused: bool, n_slots: int, s_max: int,
     assert all(r.done for r in reqs)
     tokens = sum(len(r.generated) for r in reqs)
     return {
-        "mode": "fused" if fused else "looped",
+        "mode": ("fused" if fused else "looped") if mesh is None
+                else f"fused_tp{mesh.shape['model']}",
         "tokens": tokens,
         "wall_s": round(wall, 4),
         "tok_s": round(tokens / max(wall, 1e-9), 2),
@@ -92,7 +106,7 @@ def _run_mode(params, cfg, fused: bool, n_slots: int, s_max: int,
 
 def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         s_max: int = 64, n_requests: int = 8, max_new: int = 6,
-        out: str = "BENCH_serve.json"):
+        tp: int = 0, out: str = "BENCH_serve.json"):
     cfg = get_config(arch, smoke=smoke)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     fused = _run_mode(params, cfg, True, n_slots, s_max, n_requests, max_new)
@@ -112,6 +126,16 @@ def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         "host_sync_reduction": round(
             looped["host_syncs"] / max(fused["host_syncs"], 1), 2),
     }
+    if tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+
+        row = _run_mode(params, cfg, True, n_slots, s_max, n_requests,
+                        max_new, mesh=make_tp_mesh(tp))
+        row["tp"] = tp
+        # the TP invariant the tests pin, surfaced in the artifact: same
+        # serving discipline (steps + syncs) as the unsharded fused path
+        row["host_syncs_match_fused"] = row["host_syncs"] == fused["host_syncs"]
+        result["tp"] = row
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))
@@ -133,10 +157,14 @@ def main(argv=None):
     ap.add_argument("--s-max", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--tp", type=int, default=0, metavar="N",
+                    help="also benchmark the fused path tensor-parallel "
+                         "over an N-device mesh (emits a 'tp' row)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     run(smoke=args.smoke, arch=args.arch, n_slots=args.slots, s_max=args.s_max,
-        n_requests=args.requests, max_new=args.max_new, out=args.out)
+        n_requests=args.requests, max_new=args.max_new, tp=args.tp,
+        out=args.out)
     return 0
 
 

@@ -24,6 +24,7 @@ from repro.core.execution import (  # noqa: F401
     CiMExecSpec,
     execute,
     execute_packed,
+    execute_tp,
     get_backend,
     register_backend,
     registered_specs,

@@ -366,6 +366,95 @@ def execute_packed(
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel execution (explicit shard_map path)
+# ---------------------------------------------------------------------------
+
+def execute_tp(
+    spec: CiMExecSpec,
+    x_t: jax.Array,
+    w_t: jax.Array,
+    mesh,
+    *,
+    axis_name: str = "model",
+    compressed: bool = False,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Row-parallel ternary MAC over a mesh axis (explicit manual SPMD).
+
+    The contraction dim K is split over ``axis_name``: each device runs
+    the registered kernel on its K-shard and the partial sums all-reduce
+    through :func:`repro.dist.collectives.tp_allreduce`. K is padded so
+    every shard holds *whole* ``spec.block`` blocks — the per-block ADC
+    clamp then never straddles a device boundary, the per-shard partials
+    are integer event counts, and the f32 psum is exact: TP execution is
+    **bit-identical** to :func:`execute` for every built-in formulation
+    (pinned in tests/test_tp_serve.py).
+
+    ``compressed=True`` narrows the all-reduce wire to int8 (stochastic
+    rounding; ``key`` seeds the per-shard rounding streams). Without a
+    ``key`` the stream is **deterministic and idempotent** — a pure
+    function of the operand shape — so identical calls return identical
+    results and serving stays reproducible across retraces. The flip
+    side: same-shaped call sites, scan-stacked layers, and repeated
+    decode steps all reuse the same noise, making the rounding error a
+    fixed perturbation rather than zero-mean noise that averages out.
+    The *unbiasedness* property (tests/test_collectives.py) applies
+    across fresh keys — thread ``key`` per call to get it. This is the
+    opt-in trade: 4x less collective traffic for quantization-level
+    error — the exact path is the default.
+
+    This is the *explicit* TP entry point (shard_map — the collective is
+    named in the program). Serving under plain sharded params/caches uses
+    the implicit GSPMD path instead and never needs this function; the
+    engine routes through it only for ``compress_tp=True`` (the
+    partitioner cannot be told to compress its own all-reduces).
+    Inference-only: no custom VJP is defined over the shard_map.
+    """
+    from repro.dist.collectives import shard_map, tp_allreduce
+
+    spec = spec.resolve()
+    if spec.packing != "none":
+        raise ValueError(
+            "execute_tp splits the contraction dim; packed (K-major 2-bit) "
+            "planes shard over N instead — use execute_packed with "
+            "N-sharded planes (dist.sharding.packed_specs)"
+        )
+    if spec.error_prob > 0.0:
+        raise ValueError(
+            "execute_tp is the serving TP path; drive the sensing-error "
+            "channel through execute/execute_packed (error_prob=0 here)"
+        )
+    entry = get_backend(spec)
+    tp = int(mesh.shape[axis_name])
+    lead, k, n = x_t.shape[:-1], x_t.shape[-1], w_t.shape[-1]
+    x2 = x_t.reshape((-1, k))
+    # whole blocks per shard: pad K to (block granularity) * tp
+    mult = spec.block * tp
+    x2 = _pad_axis(x2, mult, 1)
+    wp = _pad_axis(w_t, mult, 0)
+    if key is None:
+        # idempotent default stream — a pure function of the operand
+        # shape (trace-time constants), so identical calls round
+        # identically; see the docstring for what stays correlated
+        salt = (k * 1000003 + n * 8191) % (1 << 30)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), salt)
+    keys = jax.random.split(key, tp)
+
+    def local(xs, ws, ks):
+        part = entry.fn(xs, ws, spec)
+        return tp_allreduce(part, axis_name, key=ks[0], compressed=compressed)
+
+    from jax.sharding import PartitionSpec as _P
+
+    f = shard_map(
+        local, mesh=mesh,
+        in_specs=(_P(None, axis_name), _P(axis_name, None), _P(axis_name)),
+        out_specs=_P(),
+    )
+    return f(x2, wp, keys).reshape(lead + (n,)).astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Built-in backends
 # ---------------------------------------------------------------------------
 

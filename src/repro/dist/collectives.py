@@ -36,6 +36,33 @@ def compressed_psum_int8(x: jax.Array, key: jax.Array, axis_name: str) -> jax.Ar
     return total.astype(jnp.float32) * scale
 
 
+def tp_allreduce(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    key: jax.Array | None = None,
+    compressed: bool = False,
+) -> jax.Array:
+    """Tensor-parallel partial-sum all-reduce (call inside shard_map).
+
+    The serving TP entry point: row-parallel (contraction-dim-sharded)
+    ternary GEMMs produce per-device partial sums that must be summed
+    over the "model" axis every layer. ``compressed=False`` is the exact
+    ``psum`` — for CiM formulations the partials are integer ADC event
+    counts, so the f32 sum is exact and TP serving stays bit-identical.
+    ``compressed=True`` narrows the wire to int8
+    (:func:`compressed_psum_int8`, needs ``key`` for the stochastic
+    rounding) — the 4x-narrower collective the SiTe bitplane format pairs
+    with, at quantization-level error (bounded in tests/test_collectives).
+    """
+    if not compressed:
+        return jax.lax.psum(x, axis_name)
+    if key is None:
+        raise ValueError("compressed tp_allreduce needs a PRNG key "
+                         "(stochastic-rounding stream)")
+    return compressed_psum_int8(x, key, axis_name)
+
+
 def mean_grads_int8(
     mesh, grads: jax.Array, keys: jax.Array, axis_name: str = "data"
 ) -> jax.Array:

@@ -25,9 +25,24 @@ import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 PyTree = Any
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis_name: size} for a mesh — the ``axis_sizes`` currency the
+    spec rules below take (so specs only name axes the shapes divide)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def named_shardings(mesh, spec_tree: PyTree) -> PyTree:
+    """Bind a PartitionSpec tree to a mesh as NamedShardings (the form
+    ``jax.device_put`` / ``jit`` shardings consume)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
 
 # ---------------------------------------------------------------------------
 # Pytree path flattening
@@ -187,7 +202,7 @@ def cache_specs(caches: PyTree, mesh, batch: int) -> PyTree:
     """Decode-cache PartitionSpecs. Stacked cache leaves are
     (L, B, S/state...): batch over the data-like axes, the first trailing
     dim that divides over "model" (KV caches: the sequence dim)."""
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axis_sizes = mesh_axis_sizes(mesh)
     daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dsize = _axis_size(daxes, axis_sizes)
     msize = int(axis_sizes.get("model", 1))
@@ -204,6 +219,57 @@ def cache_specs(caches: PyTree, mesh, batch: int) -> PyTree:
         return P(*spec)
 
     return jax.tree.map(f, caches)
+
+
+# ---------------------------------------------------------------------------
+# Packed-bitplane specs (quant/prepare.pack_params output)
+# ---------------------------------------------------------------------------
+
+
+def packed_specs(
+    packed: Dict[str, Tuple], axis_sizes: Optional[Dict[str, int]] = None
+) -> Dict[str, Tuple]:
+    """PartitionSpecs for a ``quant.prepare.pack_params`` packed dict:
+    ``{path: (pos_plane, neg_plane, scale)}`` with planes shaped
+    (..., K/8, N) and scales (..., 1, N).
+
+    Every entry shards the output-channel dim N over "model" — the planes
+    are packed 2-bit *along K*, so splitting K would tear u8 bytes apart,
+    while an N split keeps each device streaming only the plane columns
+    its TP shard consumes (the "each device streams only its 2-bit weight
+    shard" contract). Leaves whose N doesn't divide stay replicated."""
+
+    def leaf_spec(leaf):
+        spec: List = [None] * leaf.ndim
+        if leaf.ndim >= 2 and _divides(leaf.shape[-1], "model", axis_sizes):
+            spec[-1] = "model"
+        return P(*spec)
+
+    return {
+        path: tuple(leaf_spec(leaf) for leaf in entry)
+        for path, entry in packed.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serving tensor-parallel mesh (module-global switch, mirrors the
+# activation-sharding pattern: consumers read it at trace time)
+# ---------------------------------------------------------------------------
+
+_TP_MESH = None
+
+
+def set_tp_mesh(mesh) -> None:
+    """Install the mesh the explicit TP collectives (shard_map entry
+    points — ``execution.execute_tp``) run over. ``None`` disables the
+    explicit path; the implicit GSPMD path (params/caches device_put with
+    NamedShardings, partitioner inserts collectives) needs no global."""
+    global _TP_MESH
+    _TP_MESH = mesh
+
+
+def tp_mesh():
+    return _TP_MESH
 
 
 # ---------------------------------------------------------------------------

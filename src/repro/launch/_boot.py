@@ -1,0 +1,45 @@
+"""Pre-jax-import bootstrap helpers (MUST stay jax-free).
+
+jax locks the host device count at first init, so anything that wants
+virtual CPU devices (``--tp`` serving/benchmarks, the dry-run's 512-way
+meshes) has to mutate ``XLA_FLAGS`` before the first ``import jax`` in
+the process. The ``--tp`` consumers (``repro.launch.serve``,
+``benchmarks.bench_serve``) share this scanner instead of carrying
+their own copies.
+"""
+from __future__ import annotations
+
+import os
+
+
+def tp_from_argv(argv) -> int:
+    """Best-effort ``--tp N`` / ``--tp=N`` scan of raw argv (argparse
+    hasn't run yet at bootstrap time). Unparseable values return 0 —
+    argparse will reject them properly later."""
+    for i, a in enumerate(argv):
+        val = None
+        if a == "--tp" and i + 1 < len(argv):
+            val = argv[i + 1]
+        elif a.startswith("--tp="):
+            val = a.split("=", 1)[1]
+        if val is not None:
+            try:
+                return int(val)
+            except ValueError:
+                return 0
+    return 0
+
+
+def force_host_devices_for_tp(argv) -> int:
+    """If argv requests ``--tp N > 1`` and the device-count flag isn't
+    already set, force ``max(N, 8)`` virtual host devices. Call before
+    the first jax import. Returns the scanned tp (0/1 = untouched)."""
+    tp = tp_from_argv(argv)
+    if tp > 1 and "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""
+    ):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={max(tp, 8)}"
+        ).strip()
+    return tp

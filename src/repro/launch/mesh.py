@@ -17,6 +17,32 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_tp_mesh(tp: int):
+    """(1, tp) mesh with the production axis names ("data", "model") over
+    the first ``tp`` local devices — the serving tensor-parallel mesh
+    (``launch.serve --tp N`` / ``ContinuousBatcher(mesh=...)``).
+
+    Uses an explicit device subset (``jax.make_mesh`` insists on
+    consuming every device): TP tests carve 2- and 4-way meshes out of
+    the 8 forced host devices, and a real deployment may reserve devices
+    for other model replicas.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if len(devs) < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices but only {len(devs)} are visible "
+            "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{tp} before the first jax import)"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devs[:tp]).reshape(1, tp), ("data", "model")
+    )
+
+
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     n = len(jax.devices())

@@ -10,8 +10,22 @@ clamp), or ``bitplane/jnp/bitplane_u8/II`` (2-bit packed planes, flavor
 II); combined with ``--prepare-weights`` the quantization is folded
 offline once (quant.prepare.prepare_for_spec) and packed planes are
 prepared up front instead of per step.
+
+``--tp N`` serves tensor-parallel over an N-device ("data", "model")
+mesh (DESIGN.md §8): params/caches/planes sharded, same token streams,
+same host-sync discipline. On CPU the devices are virtualized — the
+bootstrap below forces enough host devices, and it MUST run before the
+first jax import (jax locks the device count at first init, same
+contract as launch/dryrun.py). ``--compress-tp`` opts the quantized
+layers' TP all-reduces into the int8-compressed collective.
 """
 from __future__ import annotations
+
+import sys
+
+from repro.launch._boot import force_host_devices_for_tp
+
+force_host_devices_for_tp(sys.argv)  # before the jax import below
 
 import argparse
 import time
@@ -51,6 +65,14 @@ def main(argv=None):
     ap.add_argument("--loop-decode", action="store_true",
                     help="use the legacy per-slot-loop decode baseline "
                          "instead of the fused ragged-position step")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel degree: serve over an N-device "
+                         "('data', 'model') mesh (params/caches/planes "
+                         "sharded; CPU forces virtual host devices)")
+    ap.add_argument("--compress-tp", action="store_true",
+                    help="route the quantized layers' TP all-reduces "
+                         "through the int8-compressed collective "
+                         "(requires --tp > 1 and a quantized mode)")
     ap.add_argument("--prepare-weights", action="store_true",
                     help="run quant.prepare.prepare_for_spec once at startup "
                          "(requires --exec-spec): folded ternary weights, and "
@@ -69,10 +91,18 @@ def main(argv=None):
     exec_spec = parse_exec_spec(args.exec_spec) if args.exec_spec else None
     if args.prepare_weights and exec_spec is None:
         ap.error("--prepare-weights requires --exec-spec")
+    if args.compress_tp and args.tp <= 1:
+        ap.error("--compress-tp requires --tp > 1")
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(args.tp)
     batcher = ContinuousBatcher(
         params, cfg, n_slots=args.slots, s_max=args.s_max,
         exec_spec=exec_spec, temperature=args.temperature, seed=args.seed,
         fused=not args.loop_decode, prepare_weights=args.prepare_weights,
+        mesh=mesh, compress_tp=args.compress_tp,
     )
     reqs = [
         Request(i, [1 + (i * 7 + j) % (cfg.vocab - 1) for j in range(1 + i % 4)],
@@ -90,7 +120,9 @@ def main(argv=None):
           f"({toks / max(dt, 1e-9):.1f} tok/s functional-CPU), "
           f"{stats['decode_steps']} decode steps, "
           f"{stats['host_syncs']} host syncs "
-          f"({'looped' if args.loop_decode else 'fused'} decode)")
+          f"({'looped' if args.loop_decode else 'fused'} decode"
+          + (f", tp={args.tp}" + (" int8-compressed" if args.compress_tp else "")
+             if args.tp > 1 else "") + ")")
     assert all(r.done for r in reqs)
     return 0
 

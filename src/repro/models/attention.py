@@ -229,7 +229,7 @@ def gqa_attention(
             q, k_all, v_all, causal_offset=cache_index, length=length, start=start
         )
     out = out.reshape(b, s, h * hd)
-    return L.dense(out, params["wo"], qc), new_cache
+    return L.dense(out, params["wo"], qc, tp="row"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -320,7 +320,7 @@ def mla_attention(
     w_uv = params["w_uv"].reshape(r, h, dv).astype(x.dtype)
     out = L.accum_einsum("bqhr,rhd->bqhd", lat.astype(x.dtype), w_uv)
     out = out.reshape(b, s, h * dv).astype(x.dtype)
-    return L.dense(out, params["wo"], qc), new_cache
+    return L.dense(out, params["wo"], qc, tp="row"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -348,4 +348,4 @@ def cross_attention(params, x: jax.Array, enc: jax.Array, cfg: ArchConfig) -> ja
     k = L.dense(enc, params["wk"], qc).reshape(b, se, h, hd)
     v = L.dense(enc, params["wv"], qc).reshape(b, se, h, hd)
     out = _sdpa(q, k, v, causal_offset=None)
-    return L.dense(out.reshape(b, s, h * hd), params["wo"], qc)
+    return L.dense(out.reshape(b, s, h * hd), params["wo"], qc, tp="row")

@@ -96,10 +96,25 @@ class QuantConfig:
     # per-step STE re-quantization (which costs ~4 passes over every
     # weight). Per-channel scales are folded into the stored weights.
     pre_quantized: bool = False
+    # TP serving: how the row-parallel (contraction-dim-sharded) dense
+    # layers all-reduce their partial sums. "none" leaves it to the GSPMD
+    # partitioner (exact, implicit). "int8" routes the MAC through the
+    # explicit shard_map path (execution.execute_tp) with the
+    # int8-compressed collective — 4x less TP wire traffic for
+    # quantization-level error. Needs dist.sharding.set_tp_mesh (the
+    # serving engine installs it for compress_tp=True); inference-only.
+    tp_reduce: str = "none"      # none | int8
 
     def __post_init__(self):
         if self.mode not in ("off", "ternary", "cim", "cim_fused"):
             raise ValueError(self.mode)
+        if self.tp_reduce not in ("none", "int8"):
+            raise ValueError(f"unknown tp_reduce {self.tp_reduce!r}")
+        if self.tp_reduce != "none" and self.mode == "off":
+            raise ValueError(
+                "tp_reduce compresses the quantized dense path's TP "
+                "all-reduce; mode='off' runs no ternary MAC to compress"
+            )
         if self.mode == "off" and self.exec_spec is not None:
             # dense() short-circuits to the fp matmul on mode="off" and
             # would never consult the spec — reject rather than ignore
@@ -161,6 +176,7 @@ def dense(
     qc: QuantConfig,
     bias: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
+    tp: str = "none",
 ) -> jax.Array:
     """The mode-switched linear layer. x: (..., K), w: (K, N).
 
@@ -168,6 +184,15 @@ def dense(
     when the resolved spec has ``error_prob > 0`` (the model-assembly
     code does not thread per-layer RNG, so noisy specs are for direct
     dense()/api.execute callers — see serve.engine.apply_exec_spec).
+
+    ``tp`` marks how this layer parallelizes under a "model"-axis mesh
+    (DESIGN.md §8): "row" = the contraction dim K is the sharded one
+    (wo / w_down / w_out — the layers whose partial sums need a TP
+    all-reduce every step). With ``qc.tp_reduce="int8"`` and a TP mesh
+    installed (dist.sharding.set_tp_mesh), row-parallel quantized MACs
+    route through the explicit ``execution.execute_tp`` shard_map path
+    so that all-reduce moves an int8 payload; everything else keeps the
+    implicit GSPMD collectives (exact).
     """
     if qc.mode == "off":
         out = x @ w.astype(x.dtype)
@@ -199,12 +224,27 @@ def dense(
         #                 the clamp happens inside the kernel's VMEM
         #                 tiles, so no block intermediates reach HBM)
         spec = qc.resolved_spec()
+        mac = exec_mac
+        if qc.tp_reduce == "int8" and tp == "row":
+            from repro.core.execution import execute_tp
+            from repro.dist.sharding import tp_mesh
+
+            mesh = tp_mesh()
+            if mesh is not None and "model" in mesh.axis_names \
+                    and spec.resolve().packing == "none":
+                # explicit row-parallel shard_map MAC: the per-layer TP
+                # partial-sum all-reduce moves int8 (inference-only);
+                # the caller's key (if any) seeds the rounding stream
+                def mac(spec, x_q, w_q, key=None):
+                    return execute_tp(spec, x_q, w_q, mesh,
+                                      compressed=True, key=key)
+
         if spec.clamps:
-            out = exec_mac(spec, x_t.astype(jnp.float32), w_t.astype(jnp.float32),
-                           key=key)
+            out = mac(spec, x_t.astype(jnp.float32), w_t.astype(jnp.float32),
+                      key=key)
         else:
-            out = exec_mac(spec, x_t.astype(x.dtype), w_t.astype(x.dtype),
-                           key=key)
+            out = mac(spec, x_t.astype(x.dtype), w_t.astype(x.dtype),
+                      key=key)
         # fold scales in the output dtype: an f32 round-trip here makes
         # every backward cotangent (and its all-reduce) f32 (§Perf A5)
         out = out.astype(x.dtype) * (sx * sw).astype(x.dtype)
@@ -284,7 +324,7 @@ def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
 def mlp(params, x: jax.Array, qc: QuantConfig) -> jax.Array:
     g = dense(x, params["w_gate"], qc)
     u = dense(x, params["w_up"], qc)
-    return dense(swiglu(g, u), params["w_down"], qc)
+    return dense(swiglu(g, u), params["w_down"], qc, tp="row")
 
 
 def init_dense_weight(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):

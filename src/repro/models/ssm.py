@@ -223,4 +223,4 @@ def mamba2_block(
 
     y = y.reshape(b, s, di).astype(x.dtype)
     y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
-    return L.dense(y, params["w_out"], qc), new_cache
+    return L.dense(y, params["w_out"], qc, tp="row"), new_cache

@@ -93,6 +93,7 @@ def prepare_for_spec(
     params: PyTree,
     spec: CiMExecSpec,
     factor: float = tern.TWN_THRESHOLD_FACTOR,
+    mesh=None,
 ):
     """Offline surgery matched to the serving execution spec.
 
@@ -105,9 +106,38 @@ def prepare_for_spec(
                              (folding ``scale`` after the MAC) — that is
                              the path that avoids per-call packing.
 
+    ``mesh``: place the surgery outputs for tensor-parallel serving —
+    folded params land under ``dist.sharding.param_specs`` and packed
+    planes under ``packed_specs`` (N-sharded: each device stores only
+    the 2-bit plane columns its TP shard consumes). The surgery itself
+    runs replicated (it is one-off, and per-channel thresholds need the
+    full K column anyway); only the *results* are sharded.
+
     Returns ``params`` for "none", ``(params, packed)`` for bitplane
     packing — mirroring :func:`ternarize_params` / :func:`pack_params`.
     """
     if spec.packing == "bitplane_u8":
-        return pack_params(params, factor=factor)
-    return ternarize_params(params, factor=factor)
+        prepared, packed = pack_params(params, factor=factor)
+        if mesh is not None:
+            prepared, packed = _shard_prepared(prepared, packed, mesh)
+        return prepared, packed
+    prepared = ternarize_params(params, factor=factor)
+    if mesh is not None:
+        prepared, _ = _shard_prepared(prepared, None, mesh)
+    return prepared
+
+
+def _shard_prepared(params: PyTree, packed, mesh):
+    """device_put the surgery outputs under the TP sharding rules."""
+    from repro.dist import sharding as shd
+
+    axis_sizes = shd.mesh_axis_sizes(mesh)
+    params = jax.device_put(
+        params,
+        shd.named_shardings(mesh, shd.param_specs(params, axis_sizes=axis_sizes)),
+    )
+    if packed is not None:
+        packed = jax.device_put(
+            packed, shd.named_shardings(mesh, shd.packed_specs(packed, axis_sizes))
+        )
+    return params, packed

@@ -198,6 +198,20 @@ class ContinuousBatcher:
     ``api.execute_packed`` callers, and the in-model dense path serves
     from the folded ternary weights (packing downgraded to "none" so
     nothing re-packs per forward).
+
+    ``mesh`` turns on tensor-parallel serving (DESIGN.md §8): params are
+    sharded under ``dist.sharding.param_specs`` (attention/FFN column- and
+    row-parallel over the "model" axis), decode caches under
+    ``cache_specs``, and any prepared 2-bit bitplanes under
+    ``packed_specs`` (N-sharded — each device stores only its weight
+    shard). The fused step stays ONE jitted dispatch with one host fetch
+    per decode step; the GSPMD partitioner inserts the TP collectives, so
+    token streams are identical to the unsharded engine (pinned in
+    tests/test_tp_serve.py) and ``stats()`` is unchanged by TP.
+    ``compress_tp=True`` additionally routes the row-parallel quantized
+    MACs through the explicit shard_map path (``execution.execute_tp``)
+    whose per-layer partial-sum all-reduce moves int8 instead of f32 —
+    approximate (quantization-level error), opt-in, quantized modes only.
     """
 
     def __init__(
@@ -211,8 +225,22 @@ class ContinuousBatcher:
         seed: int = 0,
         fused: bool = True,
         prepare_weights: bool = False,
+        mesh=None,
+        compress_tp: bool = False,
     ):
         self.packed = None
+        self.mesh = mesh
+        self._compress_tp = bool(compress_tp)
+        if mesh is not None:
+            from repro.dist import sharding as shd  # placement, below
+
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"TP serving shards over a 'model' mesh axis; got axes "
+                    f"{mesh.axis_names} (use launch.mesh.make_tp_mesh)"
+                )
+        if compress_tp and mesh is None:
+            raise ValueError("compress_tp=True requires a mesh (TP serving)")
         if prepare_weights and exec_spec is None:
             raise ValueError(
                 "prepare_weights=True requires exec_spec (the surgery is "
@@ -220,10 +248,15 @@ class ContinuousBatcher:
                 "ternarization use quant.prepare.ternarize_params + "
                 "QuantConfig(pre_quantized=True)"
             )
+        params_placed = False
         if prepare_weights and exec_spec is not None:
             from repro.quant.prepare import prepare_for_spec
 
-            prepared = prepare_for_spec(params, exec_spec)
+            # prepare_for_spec(mesh=...) owns placement of BOTH surgery
+            # outputs (folded params under param_specs, planes under
+            # packed_specs) — don't re-place the params below
+            prepared = prepare_for_spec(params, exec_spec, mesh=mesh)
+            params_placed = mesh is not None
             if exec_spec.packing == "bitplane_u8":
                 params, self.packed = prepared
                 exec_spec = dataclasses.replace(exec_spec, packing="none")
@@ -232,14 +265,47 @@ class ContinuousBatcher:
             cfg = cfg.replace(
                 quant=dataclasses.replace(cfg.quant, pre_quantized=True)
             )
-        self.params = params
         self.cfg = cfg = apply_exec_spec(cfg, exec_spec)
+        if compress_tp:
+            if cfg.quant.mode == "off":
+                raise ValueError(
+                    "compress_tp compresses the quantized dense path's TP "
+                    "all-reduce; serve a quantized mode (or an exec_spec) "
+                    "to use it"
+                )
+            spec_now = cfg.quant.exec_spec
+            if spec_now is not None and spec_now.packing != "none":
+                # dense() routes to execute_tp only for unpacked specs
+                # (the packed planes shard over N, not K) — accepting
+                # this would silently serve with exact collectives
+                raise ValueError(
+                    f"compress_tp cannot engage under packing="
+                    f"{spec_now.packing!r}: use prepare_weights=True "
+                    "(which folds the packing offline and downgrades the "
+                    "in-model spec to packing='none') or an unpacked spec"
+                )
+            self.cfg = cfg = cfg.replace(
+                quant=dataclasses.replace(cfg.quant, tp_reduce="int8")
+            )
+        if mesh is not None and not params_placed:
+            axis_sizes = shd.mesh_axis_sizes(mesh)
+            params = jax.device_put(
+                params,
+                shd.named_shardings(
+                    mesh, shd.param_specs(params, axis_sizes=axis_sizes)),
+            )
+        self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
         self.temperature = float(temperature)
         self.fused = fused
         self._key = jax.random.PRNGKey(seed)
         self.caches = T.init_caches(cfg, n_slots, s_max)
+        self._cache_ns = None
+        if mesh is not None:
+            self._cache_ns = shd.named_shardings(
+                mesh, shd.cache_specs(self.caches, mesh, batch=n_slots))
+            self.caches = jax.device_put(self.caches, self._cache_ns)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros((n_slots,), np.int32)    # next cache write slot
         self.slot_start = np.zeros((n_slots,), np.int32)  # left-pad dead zone
@@ -267,6 +333,40 @@ class ContinuousBatcher:
         the module-level :func:`sample`, traced into the jitted step."""
         return sample(last_logits[:, None, :], key, self.temperature)[:, 0]
 
+    def _jit_step(self, f, donate):
+        """jit with the TP output shardings pinned: sampled tokens
+        replicated (they are THE one host fetch of the step), caches kept
+        under their cache_specs sharding so the donated-buffer layout is
+        a fixpoint across steps (no per-step reshard, no recompiles).
+
+        For ``compress_tp`` the call is additionally scoped under THIS
+        batcher's mesh via the dist.sharding TP-mesh switch — installed
+        around the call (where tracing happens) and restored after, so
+        two batchers on different meshes in one process never read each
+        other's mesh and nothing leaks once the batcher is done."""
+        if self._cache_ns is None:
+            jitted = jax.jit(f, donate_argnums=donate)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            tok_ns = NamedSharding(self.mesh, P())
+            jitted = jax.jit(f, donate_argnums=donate,
+                             out_shardings=(tok_ns, self._cache_ns))
+        if not self._compress_tp:
+            return jitted
+
+        def scoped(*args):
+            from repro.dist import sharding as shd
+
+            prev = shd.tp_mesh()
+            shd.set_tp_mesh(self.mesh)
+            try:
+                return jitted(*args)
+            finally:
+                shd.set_tp_mesh(prev)
+
+        return scoped
+
     def _build_decode_fused(self):
         cfg = self.cfg
 
@@ -276,7 +376,7 @@ class ContinuousBatcher:
             toks = self._sample_on_device(logits[:, -1, :], key)
             return toks, caches
 
-        return jax.jit(step, donate_argnums=(2,))
+        return self._jit_step(step, (2,))
 
     def _build_prefill_fused(self):
         cfg, n, s_max = self.cfg, self.n_slots, self.s_max
@@ -298,7 +398,7 @@ class ContinuousBatcher:
 
             return toks, jax.tree.map(merge, caches, new)
 
-        return jax.jit(pf, donate_argnums=(1,))
+        return self._jit_step(pf, (1,))
 
     def _fill_slots_fused(self):
         newly = []

@@ -1,10 +1,37 @@
 import os
 
-# Tests run single-device (the dry-run, and ONLY the dry-run, forces 512
-# host devices). Keep XLA quiet and deterministic.
+# Tests run against 8 *virtual* host devices so the tensor-parallel
+# serving suite (tests/test_tp_serve.py, test_collectives.py) exercises
+# real multi-device meshes on CPU CI. The flag must be appended BEFORE
+# the first jax import — jax locks the device count at first init (the
+# dry-run forces its own 512 in a fresh process). Single-device tests
+# are unaffected: computations without sharded operands place on device
+# 0. Keep XLA quiet and deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
-os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_cpu_multi_thread_eigen" not in _flags:
+    _flags += " --xla_cpu_multi_thread_eigen=false"
+if "xla_force_host_platform_device_count" not in _flags:
+    _flags += " --xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = _flags.strip()
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tp_mesh():
+    """Session-scoped 8-device ("data", "model") host mesh — the real
+    multi-device fixture every TP/collective test runs on. Skips (rather
+    than fails) when the environment overrode XLA_FLAGS without the
+    forced-device-count flag, so partial-environment runs still pass."""
+    if jax.device_count() < 8:
+        pytest.skip(
+            f"needs 8 virtual devices, have {jax.device_count()} "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    from repro.launch.mesh import make_tp_mesh
+
+    return make_tp_mesh(8)
