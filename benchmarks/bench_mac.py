@@ -1,0 +1,169 @@
+"""Ternary-MAC micro-benchmark: the decode-shaped fast path vs the
+pre-§9 padded path (DESIGN.md §9).
+
+The paper's throughput win lives in the weight-streaming-bound decode
+regime, where M is the handful of occupied serving slots. The pre-§9
+dispatch padded every activation to the 128-row MXU tile — a 3-slot
+decode step wasted >97% of the tile rows. This benchmark sweeps
+
+    M ∈ {1, 4, 8, 128, 512} × {unpacked, bitplane_u8} × {exact, blocked}
+
+through the tiled (pallas) backend and reports per row:
+
+  * ``us``               — microseconds per MAC (min over repeats)
+  * ``weight_gbs``       — effective GB/s of *weight* traffic (the
+                           quantity the decode regime is bound by;
+                           packed rows stream 2 bits/weight, unpacked
+                           rows 16)
+  * ``speedup_vs_prepad``— decode-class rows only: the same shape timed
+                           under the forced pre-§9 prefill tiles
+                           (``set_shape_class_override``), old/new
+  * ``bit_identical``    — new path vs the jnp oracle, and (decode
+                           rows) new vs pre-pad path, exact equality
+
+Off-TPU the pallas kernels run in interpret mode, so absolute numbers
+are not TPU numbers — the old-vs-new ratio on identical shapes is the
+portable signal (the interpreter pays per padded row too). Emits
+``BENCH_mac.json`` (CI validates and uploads it; the README perf table
+row comes from a full run).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_mac [--full] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import ternary as tern
+from repro.core.execution import set_shape_class_override, shape_class
+
+MS = (1, 4, 8, 128, 512)
+REPEATS = 5
+
+
+def _rand_ternary(key, shape, p_zero=0.25):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(jnp.float32)
+
+
+def _time(fn, repeats=REPEATS):
+    fn().block_until_ready()  # compile outside the clock
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times) * 1e6)
+
+
+def _row(m, k, n, formulation, packed, x, w, p1, p2, oracle):
+    spec = api.CiMExecSpec(
+        formulation=formulation, backend="pallas",
+        packing="bitplane_u8" if packed else "none",
+    )
+    if packed:
+        run = lambda: api.execute_packed(spec, x, p1, p2)  # noqa: E731
+        weight_bytes = 2 * (k // 8) * n           # 2 bits/weight
+    else:
+        run = lambda: api.execute(spec, x, w)     # noqa: E731
+        weight_bytes = k * n * 2                  # bf16 operand traffic
+    us = _time(run)
+    out = np.asarray(run())
+    row = {
+        "m": m,
+        "k": k,
+        "n": n,
+        "formulation": formulation,
+        "packing": spec.packing,
+        "shape_class": shape_class(m),
+        "us": round(us, 2),
+        "weight_gbs": round(weight_bytes / (us * 1e-6) / 1e9, 4),
+        "bit_identical": bool(np.array_equal(out, oracle)),
+    }
+    if row["shape_class"] == "decode":
+        set_shape_class_override("prefill")
+        try:
+            old_us = _time(run)
+            old_out = np.asarray(run())
+        finally:
+            set_shape_class_override(None)
+        row["old_us"] = round(old_us, 2)
+        row["speedup_vs_prepad"] = round(old_us / max(us, 1e-9), 2)
+        row["bit_identical"] = row["bit_identical"] and bool(
+            np.array_equal(out, old_out))
+    return row
+
+
+def run(smoke: bool = True, out: str = "BENCH_mac.json"):
+    k, n = (256, 256) if smoke else (2048, 2048)
+    key = jax.random.PRNGKey(0)
+    kw, kx = jax.random.split(key)
+    w = _rand_ternary(kw, (k, n), p_zero=0.25)
+    p1, p2 = tern.pack_ternary(w.astype(jnp.int8), axis=0)
+    rows = []
+    for m in MS:
+        x = _rand_ternary(jax.random.fold_in(kx, m), (m, k), p_zero=0.25)
+        for formulation in ("exact", "blocked"):
+            oracle_spec = api.CiMExecSpec(formulation=formulation,
+                                          backend="jnp")
+            oracle = np.asarray(api.execute(oracle_spec, x, w))
+            for packed in (False, True):
+                rows.append(_row(m, k, n, formulation, packed,
+                                 x, w, p1, p2, oracle))
+                r = rows[-1]
+                tag = f"M={m:<4} {formulation:<8} {r['packing']:<12}"
+                extra = (f"  speedup_vs_prepad={r['speedup_vs_prepad']}x"
+                         if "speedup_vs_prepad" in r else "")
+                print(f"[bench_mac] {tag} {r['us']:>10.1f}us  "
+                      f"{r['weight_gbs']:>8.3f} GB/s  "
+                      f"bit_identical={r['bit_identical']}{extra}")
+    decode_rows = [r for r in rows if r["shape_class"] == "decode"]
+    result = {
+        "bench": "mac",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "k": k,
+        "n": n,
+        "block": 16,
+        "adc_max": 8,
+        "rows": rows,
+        "decode_speedup_max": max(r["speedup_vs_prepad"] for r in decode_rows),
+        "decode_speedup_min": min(r["speedup_vs_prepad"] for r in decode_rows),
+        "all_bit_identical": all(r["bit_identical"] for r in rows),
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[bench_mac] decode speedup vs pre-pad path: "
+          f"{result['decode_speedup_min']}x - {result['decode_speedup_max']}x"
+          f" (bit-identical: {result['all_bit_identical']})")
+    print(f"[bench_mac] wrote {out}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--smoke", dest="smoke", action="store_true",
+                      help="small K/N sweep (the default; CI-feasible on "
+                           "CPU interpret mode)")
+    size.add_argument("--full", dest="smoke", action="store_false",
+                      help="full-size K/N sweep")
+    ap.set_defaults(smoke=True)
+    ap.add_argument("--out", default="BENCH_mac.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,6 +7,9 @@
   bench_accuracy — Section III.2 resilience (ADC clamp + sensing errors)
   bench_ablation — N_A / ADC-precision design-point sweep (Sections III.2, IV.4)
   bench_kernels  — kernel micro-bench (CPU wall time + cost profile)
+  bench_mac      — decode-shaped MAC fast path vs the pre-pad path
+                   (M sweep x packed/unpacked x exact/blocked; emits
+                   BENCH_mac.json)
   bench_roofline — §Roofline table from the dry-run artifacts
   bench_serve    — serving throughput: fused ragged-position decode vs
                    the per-slot-loop baseline (emits BENCH_serve.json)
@@ -29,6 +32,7 @@ def main() -> None:
         bench_accuracy,
         bench_array,
         bench_kernels,
+        bench_mac,
         bench_roofline,
         bench_serve,
         bench_system,
@@ -40,6 +44,7 @@ def main() -> None:
         "accuracy": bench_accuracy,
         "ablation": bench_ablation,
         "kernels": bench_kernels,
+        "mac": bench_mac,
         "roofline": bench_roofline,
         "serve": bench_serve,
     }

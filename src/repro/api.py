@@ -17,21 +17,29 @@ for the full documentation, DESIGN.md §3/§7 for the architecture.
 """
 from repro.core.execution import (  # noqa: F401
     BACKENDS,
+    DECODE_M_MAX,
     FLAVORS,
     FORMULATIONS,
     PACKINGS,
+    SHAPE_CLASSES,
     BackendEntry,
     CiMExecSpec,
+    autotune,
+    canonical_plane_layout,
+    clear_tile_cache,
     execute,
     execute_packed,
     execute_tp,
     get_backend,
     register_backend,
     registered_specs,
+    shape_class,
     spec_array_cost,
     spec_cost_summary,
     spec_design,
+    tiles_for,
 )
+from repro.core.ternary import PackedPlanes  # noqa: F401
 from repro.hw import (  # noqa: F401
     ArrayCost,
     ArraySpec,

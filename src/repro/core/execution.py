@@ -47,6 +47,16 @@ TPU); ``auto`` resolves to pallas on TPU else jnp. Packing
 ``bitplane_u8`` stores weights as two packed uint8 bitplanes, 2 bits per
 ternary weight (the memory-macro layout; 8x less HBM weight traffic than
 int8).
+
+Shape-aware dispatch (DESIGN.md §9): pallas registry entries carry a
+*tile table* — ``(bm, bk, bn)`` as a function of (M, K, N) — with a
+**decode class** (M <= :data:`DECODE_M_MAX`) that selects small-M tiles
+instead of padding every activation to the 128-row MXU tile (a 3-slot
+decode step would waste >97% of the MXU rows). ``tiles_for`` resolves
+the tiles for a call (autotuned winners first, then the entry's table)
+*outside* the jit boundary, so the choice participates in the trace
+cache key; :func:`autotune` benchmarks the registered candidates per
+(spec, shape-class) and caches winners for every later ``execute``.
 """
 from __future__ import annotations
 
@@ -60,7 +70,7 @@ import jax.numpy as jnp
 
 from repro.core import ternary as tern
 from repro.kernels import ref
-from repro.kernels.packed_mac import packed_cim_matmul
+from repro.kernels.packed_mac import packed_cim_matmul, packed_cim_matmul_decode
 from repro.kernels.ternary_mac import ternary_cim_matmul, ternary_exact_matmul
 
 FORMULATIONS = ("exact", "blocked", "corrected", "bitplane", "fused")
@@ -156,8 +166,12 @@ class CiMExecSpec:
 
 @dataclasses.dataclass(frozen=True)
 class BackendEntry:
-    fn: Callable  # fn(x2d, w, spec) -> (M, N); K already padded to tiles
+    fn: Callable  # fn(x2d, w, spec[, tiles]) -> (M, N); K padded to block
     clamps: bool  # whether the formulation applies the ADC clamp
+    # (m, k, n) -> (bm, bk, bn) tile table; None = kernel has no tiling
+    # dimension (jnp formulations). When set, ``fn`` takes a 4th ``tiles``
+    # argument and the shim resolves it via tiles_for outside the jit.
+    tiles: Optional[Callable[[int, int, int], Tuple[int, int, int]]] = None
 
 
 _REGISTRY: Dict[Tuple[str, str, str], BackendEntry] = {}
@@ -175,17 +189,24 @@ def _parse_key(name) -> Tuple[str, str, str]:
     return key  # type: ignore[return-value]
 
 
-def register_backend(name, fn: Callable, *, clamps: bool = True) -> None:
+def register_backend(name, fn: Callable, *, clamps: bool = True,
+                     tiles: Optional[Callable] = None) -> None:
     """Register a MAC kernel under a ``"formulation/backend/packing"``
     key (or an equivalent 3-tuple). ``fn(x2d, w_t, spec)`` receives the
     flattened (M, K) inputs with K padded to the block/packing
     granularity and must return the (M, N) product. ``clamps`` records
     whether the formulation applies the per-block ADC clamp (tests use it
-    to pick the right oracle configuration)."""
+    to pick the right oracle configuration).
+
+    ``tiles``: optional ``(m, k, n) -> (bm, bk, bn)`` tile table for
+    tiled (pallas) kernels. When given, ``fn`` is called as
+    ``fn(x2d, w_t, spec, tiles)`` with the resolved tile triple (an
+    autotuned winner when one is cached, else the table's answer for the
+    call's shape class — see :func:`tiles_for`)."""
     key = _parse_key(name)
     if key[1] == "auto":
         raise ValueError("register concrete backends, not 'auto'")
-    _REGISTRY[key] = BackendEntry(fn, bool(clamps))
+    _REGISTRY[key] = BackendEntry(fn, bool(clamps), tiles)
 
 
 def get_backend(spec: CiMExecSpec) -> BackendEntry:
@@ -204,6 +225,187 @@ def registered_specs() -> Iterator[CiMExecSpec]:
 
 
 # ---------------------------------------------------------------------------
+# Shape classes, tile tables, autotune (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# decode regime boundary: at M <= 8 the MAC is weight-streaming-bound and
+# padding M to the 128-row MXU tile wastes >93% of the rows
+DECODE_M_MAX = 8
+
+SHAPE_CLASSES = ("decode", "prefill")
+
+# autotuned winners: {(registry_key, block, shape_class): (bm, bk, bn)}
+# — block is part of the key because it sets the bk validity granularity
+# (a winner tuned at block=16 may not tile a block=64 spec)
+_TILE_CACHE: Dict[Tuple, Tuple[int, int, int]] = {}
+
+# benchmark/test lever: force every call into one shape class (None = off)
+_CLASS_OVERRIDE: Optional[str] = None
+
+
+def shape_class(m: int) -> str:
+    """The dispatch class of an (M, K) x (K, N) MAC: "decode" for
+    M <= DECODE_M_MAX (ragged decode steps, M = occupied slots), else
+    "prefill" (prompt/training shapes that fill MXU tiles)."""
+    return "decode" if m <= DECODE_M_MAX else "prefill"
+
+
+def set_shape_class_override(cls: Optional[str]) -> None:
+    """Force tile resolution into one shape class regardless of M (the
+    pre-PR behaviour is ``"prefill"`` — decode shapes padded to the
+    128-row tile). Benchmarks use it to measure old-vs-new on the same
+    shape; None restores shape-derived dispatch. Affects new traces only
+    (tiles are resolved per call, outside jit)."""
+    global _CLASS_OVERRIDE
+    if cls is not None and cls not in SHAPE_CLASSES:
+        raise ValueError(f"unknown shape class {cls!r} (use {SHAPE_CLASSES})")
+    _CLASS_OVERRIDE = cls
+
+
+def clear_tile_cache() -> None:
+    """Drop every autotuned winner (tests / re-tuning)."""
+    _TILE_CACHE.clear()
+
+
+def tiles_for(
+    spec: CiMExecSpec, m: int, k: int, n: int
+) -> Optional[Tuple[int, int, int]]:
+    """Resolve the (bm, bk, bn) tiles an ``execute`` call will use: an
+    autotuned winner for (spec, shape-class) when cached, else the
+    registry entry's tile table. None for untiled (jnp) backends.
+
+    Resolved *outside* the jitted forward so the choice is part of the
+    trace cache key — flipping the override or re-autotuning retraces
+    instead of silently reusing a stale executable."""
+    spec = spec.resolve()
+    entry = _REGISTRY.get(spec.registry_key)
+    if entry is None or entry.tiles is None:
+        return None
+    cls = _CLASS_OVERRIDE or shape_class(m)
+    cached = _TILE_CACHE.get((spec.registry_key, spec.block, cls))
+    if cached is not None:
+        return cached
+    # an override crossing the natural class substitutes a representative
+    # M so the entry table answers for the *forced* class
+    if cls != shape_class(m):
+        m = DECODE_M_MAX if cls == "decode" else 128
+    return entry.tiles(m, k, n)
+
+
+# tile candidates swept by autotune(), per shape class
+_TILE_CANDIDATES: Dict[str, Tuple[Tuple[int, int, int], ...]] = {
+    "decode": ((8, 128, 128), (8, 256, 128), (8, 512, 128), (8, 256, 256)),
+    "prefill": ((128, 128, 128), (128, 256, 128), (128, 512, 128),
+                (256, 256, 128), (128, 256, 256)),
+}
+
+
+def _tiles_valid(spec: CiMExecSpec, tiles: Tuple[int, int, int]) -> bool:
+    bm, bk, bn = tiles
+    if spec.packing == "bitplane_u8":
+        return bk % (8 * spec.block) == 0  # whole packed bytes, whole blocks
+    return bk % spec.block == 0  # the ADC clamp never straddles a K tile
+
+
+def autotune(
+    spec: CiMExecSpec,
+    shapes: Tuple[Tuple[int, int, int], ...] = ((4, 1024, 512), (256, 1024, 512)),
+    *,
+    candidates: Optional[Dict[str, Tuple[Tuple[int, int, int], ...]]] = None,
+    repeats: int = 3,
+) -> Dict[str, Dict]:
+    """Benchmark the registered tile candidates for ``spec`` on one
+    representative (M, K, N) per shape class and cache the winners —
+    every later :func:`execute`/:func:`execute_packed` at that
+    (spec, shape-class) picks them up (new traces; run before serving).
+
+    Returns ``{shape_class: {"tiles": winner, "us": best_us,
+    "candidates": {"bmxbkxbn": us}}}``. Raises for untiled backends —
+    jnp formulations have no tile dimension to tune."""
+    import time
+
+    import numpy as np
+
+    spec = spec.resolve()
+    entry = get_backend(spec)
+    if entry.tiles is None:
+        raise ValueError(
+            f"{spec.name} has no tile table to autotune (jnp backends "
+            f"lower through XLA; only tiled pallas entries tune)"
+        )
+    key = jax.random.PRNGKey(0)
+    report: Dict[str, Dict] = {}
+    for m, k, n in shapes:
+        cls = shape_class(m)
+        kx, kw = jax.random.split(jax.random.fold_in(key, m))
+        x = jnp.sign(jax.random.normal(kx, (m, k))).astype(jnp.float32)
+        w = jnp.sign(jax.random.normal(kw, (k, n))).astype(jnp.float32)
+        if spec.packing == "bitplane_u8":
+            from repro.core import ternary as _tern
+
+            p1, p2 = _tern.pack_ternary(w.astype(jnp.int8), axis=0)
+
+            def run(tiles):
+                return _packed_forward(spec, tiles, x, p1, p2, n)
+        else:
+
+            def run(tiles):
+                return _jit_execute(spec, tiles, x, w)
+
+        cands = (candidates or _TILE_CANDIDATES)[cls]
+        timings: Dict[str, float] = {}
+        best: Optional[Tuple[int, int, int]] = None
+        for tiles in cands:
+            if not _tiles_valid(spec, tiles):
+                continue
+            run(tiles).block_until_ready()  # compile outside the clock
+            times = []
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                run(tiles).block_until_ready()
+                times.append(time.perf_counter() - t0)
+            us = float(np.min(times) * 1e6)
+            timings["x".join(map(str, tiles))] = round(us, 2)
+            if best is None or us < timings["x".join(map(str, best))]:
+                best = tiles
+        if best is None:
+            raise ValueError(f"no valid tile candidate for {spec.name}/{cls}")
+        _TILE_CACHE[(spec.registry_key, spec.block, cls)] = best
+        report[cls] = {
+            "tiles": best,
+            "us": timings["x".join(map(str, best))],
+            "candidates": timings,
+        }
+    return report
+
+
+def canonical_plane_layout(spec: CiMExecSpec) -> Tuple[int, int]:
+    """(K multiple, N multiple) of the **canonical stored-plane layout**
+    for ``spec``: the granularity ``quant.prepare.prepare_for_spec`` pads
+    packed bitplanes to at prepare time, chosen so the *default* tile
+    tables of both shape classes divide it — ``execute_packed`` then
+    consumes the stored planes with zero per-step padding/relayout
+    (autotuned non-default winners may still re-pad per call, which is
+    correct, merely slower). jnp packed backends tile nothing; their
+    canonical granularity is the block/byte lcm."""
+    spec = spec.resolve()
+    entry = _REGISTRY.get(spec.registry_key)
+    base = math.lcm(spec.block, 8)
+    if entry is None or entry.tiles is None:
+        return base, 1
+    k_mult, n_mult = base, 1
+    # query the table at a representative large (K, N): the canonical
+    # layout is one granularity for the whole weight tree, so tables
+    # that scale tiles with the shape answer for the unclamped regime
+    big = 1 << 20
+    for m in (1, 128):
+        _, bk, bn = entry.tiles(m, big, big)
+        k_mult = math.lcm(k_mult, max(int(bk), 1))
+        n_mult = math.lcm(n_mult, max(int(bn), 1))
+    return k_mult, n_mult
+
+
+# ---------------------------------------------------------------------------
 # The shared execution shim
 # ---------------------------------------------------------------------------
 
@@ -217,25 +419,33 @@ def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, cfg)
 
 
-def _forward(spec: CiMExecSpec, x: jax.Array, w: jax.Array) -> jax.Array:
+def _forward(
+    spec: CiMExecSpec, x: jax.Array, w: jax.Array, tiles=None
+) -> jax.Array:
     entry = get_backend(spec)
     lead, k, n = x.shape[:-1], x.shape[-1], w.shape[-1]
     x2 = x.reshape((-1, k))
     mult = spec.block if spec.packing == "none" else math.lcm(spec.block, 8)
-    out = entry.fn(_pad_axis(x2, mult, 1), _pad_axis(w, mult, 0), spec)
+    xp, wp = _pad_axis(x2, mult, 1), _pad_axis(w, mult, 0)
+    if entry.tiles is None:
+        out = entry.fn(xp, wp, spec)
+    else:
+        out = entry.fn(xp, wp, spec, tiles or tiles_for(spec, x2.shape[0], k, n))
     return out.reshape(lead + (n,)).astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _ste_execute(spec: CiMExecSpec, x: jax.Array, w: jax.Array) -> jax.Array:
-    return _forward(spec, x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _ste_execute(
+    spec: CiMExecSpec, tiles, x: jax.Array, w: jax.Array
+) -> jax.Array:
+    return _forward(spec, x, w, tiles)
 
 
-def _ste_fwd(spec, x, w):
-    return _ste_execute(spec, x, w), (x, w)
+def _ste_fwd(spec, tiles, x, w):
+    return _ste_execute(spec, tiles, x, w), (x, w)
 
 
-def _ste_bwd(spec, res, g):
+def _ste_bwd(spec, tiles, res, g):
     # Straight-through past the clamp: exact-matmul gradients (for the
     # exact/fused formulations this IS the true gradient). Clamping
     # formulations accumulate the STE backward in f32; exact/fused keep
@@ -251,7 +461,7 @@ def _ste_bwd(spec, res, g):
 
 _ste_execute.defvjp(_ste_fwd, _ste_bwd)
 
-_jit_execute = jax.jit(_ste_execute, static_argnums=(0,))
+_jit_execute = jax.jit(_ste_execute, static_argnums=(0, 1))
 
 
 def _apply_sense_channel(spec, out, k_dim, key):
@@ -308,30 +518,36 @@ def execute(
     """
     spec = spec.resolve()
     clean = dataclasses.replace(spec, error_prob=0.0)
-    out = _jit_execute(clean, x_t, w_t)
+    m = math.prod(x_t.shape[:-1])
+    tiles = tiles_for(clean, m, x_t.shape[-1], w_t.shape[-1])
+    out = _jit_execute(clean, tiles, x_t, w_t)
     return _apply_sense_channel(spec, out, x_t.shape[-1], key)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _packed_forward(spec, x, w_pos, w_neg):
+@functools.partial(jax.jit, static_argnums=(0, 1, 5))
+def _packed_forward(spec, tiles, x, w_pos, w_neg, n_out):
     lead, k = x.shape[:-1], x.shape[-1]
-    n = w_pos.shape[-1]
     x2 = x.reshape((-1, k))
+    # lift x to the stored planes' K depth (canonical planes carry K
+    # already padded — zero activation rows are inert); legacy same-K
+    # planes pad both sides to the block/byte granularity as before
     mult = math.lcm(spec.block, 8)
+    k_target = max(w_pos.shape[-2] * 8, -(-k // mult) * mult)
     out = _packed_stored(
-        _pad_axis(x2, mult, 1),
-        _pad_axis(w_pos, mult // 8, 0),
-        _pad_axis(w_neg, mult // 8, 0),
+        _pad_axis(x2, k_target, 1),
+        _pad_axis(w_pos, k_target // 8, 0),
+        _pad_axis(w_neg, k_target // 8, 0),
         spec,
+        tiles,
     )
-    return out.reshape(lead + (n,)).astype(x.dtype)
+    return out[:, :n_out].reshape(lead + (n_out,)).astype(x.dtype)
 
 
 def execute_packed(
     spec: CiMExecSpec,
     x_t: jax.Array,
-    w_pos: jax.Array,
-    w_neg: jax.Array,
+    w_pos,
+    w_neg: Optional[jax.Array] = None,
     *,
     key: Optional[jax.Array] = None,
 ) -> jax.Array:
@@ -343,11 +559,28 @@ def execute_packed(
     ``packing="bitplane_u8"`` packs on the fly and is for functional
     work only).
 
-    x_t: (..., K) ternary values; w_pos/w_neg: (K/8, N) uint8 planes
-    (``repro.core.ternary.pack_ternary`` layout along K). The spec's
-    formulation selects clamped ("blocked") or exact MAC semantics.
-    Inference path — no custom VJP is defined over the packed planes.
+    x_t: (..., K) ternary values. The weight side is either
+
+      * ``w_pos``/``w_neg``: (K/8, N) uint8 planes
+        (``repro.core.ternary.pack_ternary`` layout along K), or
+      * one :class:`repro.core.ternary.PackedPlanes` — the canonical
+        pre-padded layout ``quant.prepare.prepare_for_spec`` stores
+        (pass it as ``w_pos``, leave ``w_neg`` unset). Its planes enter
+        the kernel with **zero** per-step padding/relayout and the
+        result slices back to the recorded logical N; decode-class M
+        (<= DECODE_M_MAX) pads M only to the small decode tile, never
+        to 128 (both pinned by jaxpr tests).
+
+    The spec's formulation selects clamped ("blocked") or exact MAC
+    semantics. Inference path — no custom VJP over the packed planes.
+
+    ``x_t`` must hold exact ternary values: the decode-class pallas path
+    computes in int8/int32 (DESIGN.md §9), so fractional activations —
+    already outside this function's contract — would *truncate* there
+    while the bf16 prefill path would not.
     """
+    from repro.core.ternary import PackedPlanes
+
     spec = spec.resolve()
     if spec.packing != "bitplane_u8":
         raise ValueError("execute_packed requires packing='bitplane_u8'")
@@ -355,13 +588,34 @@ def execute_packed(
         raise ValueError(
             f"packed kernels implement exact|blocked, not {spec.formulation!r}"
         )
-    if x_t.shape[-1] != w_pos.shape[0] * 8 or w_pos.shape != w_neg.shape:
-        raise ValueError(
-            f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
-            f"planes {w_pos.shape} / {w_neg.shape}"
-        )
+    if isinstance(w_pos, PackedPlanes):
+        planes = w_pos
+        if w_neg is not None:
+            raise ValueError("pass PackedPlanes alone (it carries both planes)")
+        if planes.pos.ndim != 2:
+            raise ValueError(
+                f"stacked planes {planes.pos.shape}: slice one layer first "
+                f"(PackedPlanes.layer(i))"
+            )
+        if x_t.shape[-1] != planes.k:
+            raise ValueError(
+                f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
+                f"logical plane K={planes.k}"
+            )
+        w_pos, w_neg, n_out = planes.pos, planes.neg, planes.n
+    else:
+        if w_neg is None:
+            raise ValueError("raw planes need both w_pos and w_neg")
+        if x_t.shape[-1] != w_pos.shape[0] * 8 or w_pos.shape != w_neg.shape:
+            raise ValueError(
+                f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
+                f"planes {w_pos.shape} / {w_neg.shape}"
+            )
+        n_out = w_pos.shape[-1]
     clean = dataclasses.replace(spec, error_prob=0.0)
-    out = _packed_forward(clean, x_t, w_pos, w_neg)
+    m = math.prod(x_t.shape[:-1])
+    tiles = tiles_for(clean, m, w_pos.shape[0] * 8, w_pos.shape[-1])
+    out = _packed_forward(clean, tiles, x_t, w_pos, w_neg, n_out)
     return _apply_sense_channel(spec, out, x_t.shape[-1], key)
 
 
@@ -439,9 +693,15 @@ def execute_tp(
         salt = (k * 1000003 + n * 8191) % (1 << 30)
         key = jax.random.fold_in(jax.random.PRNGKey(0), salt)
     keys = jax.random.split(key, tp)
+    # per-shard tiles for tiled (pallas) entries, resolved on the shard's
+    # local K extent (the shape the kernel actually sees)
+    tiles = tiles_for(spec, x2.shape[0], x2.shape[1] // tp, n)
 
     def local(xs, ws, ks):
-        part = entry.fn(xs, ws, spec)
+        if entry.tiles is None:
+            part = entry.fn(xs, ws, spec)
+        else:
+            part = entry.fn(xs, ws, spec, tiles)
         return tp_allreduce(part, axis_name, key=ks[0], compressed=compressed)
 
     from jax.sharding import PartitionSpec as _P
@@ -531,76 +791,112 @@ def _fused_jnp(x2, w, spec):
 
 # ---- pallas ---------------------------------------------------------------
 
+# built-in tile tables: decode class (M <= DECODE_M_MAX) takes the small
+# 8-row M tile — the kernels then pad M to 8, not 128 — prefill keeps the
+# pre-§9 MXU-filling tiles
 
-def _blocked_pallas(x2, w, spec):
-    m, _ = x2.shape
-    n = w.shape[1]
-    xp = _pad_axis(_pad_axis(x2, 128, 0), 128, 1)
-    wp = _pad_axis(_pad_axis(w, 128, 0), 128, 1)
+
+def _blocked_tiles(m, k, n):
+    return (8, 128, 128) if m <= DECODE_M_MAX else (128, 128, 128)
+
+
+def _exact_tiles(m, k, n):
+    return (8, 512, 128) if m <= DECODE_M_MAX else (128, 512, 128)
+
+
+def _packed_tiles(m, k, n):
+    return (8, 256, 128) if m <= DECODE_M_MAX else (128, 256, 128)
+
+
+def _blocked_pallas(x2, w, spec, tiles):
+    m, n = x2.shape[0], w.shape[1]
+    bm, bk, bn = tiles
+    xp = _pad_axis(_pad_axis(x2, bm, 0), bk, 1)
+    wp = _pad_axis(_pad_axis(w, bk, 0), bn, 1)
     out = ternary_cim_matmul(
         xp.astype(jnp.bfloat16), wp.astype(jnp.bfloat16),
         block=spec.block, adc_max=spec.adc_max,
+        bm=bm, bk=bk, bn=bn,
         interpret=not _on_tpu(),
     )
     return out[:m, :n]
 
 
-def _exact_pallas(x2, w, spec):
-    m, _ = x2.shape
-    n = w.shape[1]
-    xp = _pad_axis(_pad_axis(x2, 128, 0), 512, 1)
-    wp = _pad_axis(_pad_axis(w, 512, 0), 128, 1)
+def _exact_pallas(x2, w, spec, tiles):
+    m, n = x2.shape[0], w.shape[1]
+    bm, bk, bn = tiles
+    xp = _pad_axis(_pad_axis(x2, bm, 0), bk, 1)
+    wp = _pad_axis(_pad_axis(w, bk, 0), bn, 1)
     out = ternary_exact_matmul(
         xp.astype(jnp.bfloat16), wp.astype(jnp.bfloat16),
+        bm=bm, bk=bk, bn=bn,
         interpret=not _on_tpu(),
     )
     return out[:m, :n]
 
 
-def _packed(x2, w, spec, cim: bool, pallas: bool):
-    m, _ = x2.shape
-    n = w.shape[1]
-    if pallas:
-        xp = _pad_axis(_pad_axis(x2, 128, 0), 256, 1)
-        wp = _pad_axis(_pad_axis(w, 256, 0), 128, 1)
-        w_pos, w_neg = tern.pack_ternary(wp.astype(jnp.int8), axis=0)
-        out = packed_cim_matmul(
-            xp.astype(jnp.bfloat16), w_pos, w_neg,
+def _pad_planes(w_pos, w_neg, rows: int, cols: int):
+    """Pad stored (K/8, N) planes to a kernel tile granularity — a no-op
+    (nothing enters the jaxpr) when the planes are already canonical
+    (quant.prepare.prepare_for_spec emits them pre-padded)."""
+    return (
+        _pad_axis(_pad_axis(w_pos, rows, 0), cols, 1),
+        _pad_axis(_pad_axis(w_neg, rows, 0), cols, 1),
+    )
+
+
+def _packed_planes_mac(x2, w_pos, w_neg, spec, tiles, cim: bool, pallas: bool):
+    """The shared packed-plane MAC behind both the functional `_packed`
+    path and the stored-plane `_packed_stored` fast path: pad planes to
+    the tile granularity (shared helper; no-op on canonical layouts) and
+    dispatch the decode- or prefill-shaped kernel by the M tile."""
+    m, n = x2.shape[0], w_pos.shape[1]
+    if not pallas:
+        return ref.ref_packed_matmul(
+            x2.astype(jnp.float32), w_pos, w_neg,
             block=spec.block, adc_max=spec.adc_max, cim=cim,
-            interpret=not _on_tpu(),
         )
-        return out[:m, :n]
+    bm, bk, bn = tiles or _packed_tiles(m, x2.shape[1], n)
+    xp = _pad_axis(x2, bk, 1)
+    pp, pn = _pad_planes(w_pos, w_neg, bk // 8, bn)
+    if bm <= DECODE_M_MAX:
+        # decode class: whole-M grid steps, int8 operands, int32 a/b
+        # accumulation — M pads to the 8-row decode tile, never to 128
+        out = packed_cim_matmul_decode(
+            _pad_axis(xp, bm, 0).astype(jnp.int8), pp, pn,
+            block=spec.block, adc_max=spec.adc_max, cim=cim,
+            bk=bk, bn=bn, interpret=not _on_tpu(),
+        ).astype(jnp.float32)
+    else:
+        out = packed_cim_matmul(
+            _pad_axis(xp, bm, 0).astype(jnp.bfloat16), pp, pn,
+            block=spec.block, adc_max=spec.adc_max, cim=cim,
+            bm=bm, bk=bk, bn=bn, interpret=not _on_tpu(),
+        )
+    return out[:m, :n]
+
+
+def _packed(x2, w, spec, tiles=None, *, cim: bool, pallas: bool):
+    """Functional packed path (dense ternary w in hand): pack **once**
+    at the logical K extent, then pad the 2-bit planes — not the dense
+    weight — to the tile granularity (the pre-§9 version padded w to the
+    full K tile first and packed the padded array every call)."""
     w_pos, w_neg = tern.pack_ternary(w.astype(jnp.int8), axis=0)
-    return ref.ref_packed_matmul(
-        x2.astype(jnp.float32), w_pos, w_neg,
-        block=spec.block, adc_max=spec.adc_max, cim=cim,
-    )[:, :n]
+    return _packed_planes_mac(x2, w_pos, w_neg, spec, tiles, cim, pallas)
 
 
-def _packed_stored(x2, w_pos, w_neg, spec):
+def _packed_stored(x2, w_pos, w_neg, spec, tiles=None):
     """Packed MAC from stored planes (no per-call pack) — the
     execute_packed fast path."""
-    m = x2.shape[0]
-    n = w_pos.shape[1]
-    cim = spec.clamps
-    if spec.backend == "pallas":
-        xp = _pad_axis(_pad_axis(x2, 128, 0), 256, 1)
-        pp = _pad_axis(_pad_axis(w_pos, 32, 0), 128, 1)
-        pn = _pad_axis(_pad_axis(w_neg, 32, 0), 128, 1)
-        out = packed_cim_matmul(
-            xp.astype(jnp.bfloat16), pp, pn,
-            block=spec.block, adc_max=spec.adc_max, cim=cim,
-            interpret=not _on_tpu(),
-        )
-        return out[:m, :n]
-    return ref.ref_packed_matmul(
-        x2.astype(jnp.float32), w_pos, w_neg,
-        block=spec.block, adc_max=spec.adc_max, cim=cim,
+    return _packed_planes_mac(
+        x2, w_pos, w_neg, spec, tiles, spec.clamps,
+        pallas=spec.backend == "pallas",
     )
 
 
 register_backend("exact/jnp/none", _exact_jnp, clamps=False)
-register_backend("exact/pallas/none", _exact_pallas, clamps=False)
+register_backend("exact/pallas/none", _exact_pallas, clamps=False,
+                 tiles=_exact_tiles)
 register_backend(
     "exact/jnp/bitplane_u8",
     functools.partial(_packed, cim=False, pallas=False), clamps=False,
@@ -608,9 +904,11 @@ register_backend(
 register_backend(
     "exact/pallas/bitplane_u8",
     functools.partial(_packed, cim=False, pallas=True), clamps=False,
+    tiles=_packed_tiles,
 )
 register_backend("blocked/jnp/none", _blocked_jnp, clamps=True)
-register_backend("blocked/pallas/none", _blocked_pallas, clamps=True)
+register_backend("blocked/pallas/none", _blocked_pallas, clamps=True,
+                 tiles=_blocked_tiles)
 register_backend(
     "blocked/jnp/bitplane_u8",
     functools.partial(_packed, cim=True, pallas=False), clamps=True,
@@ -618,6 +916,7 @@ register_backend(
 register_backend(
     "blocked/pallas/bitplane_u8",
     functools.partial(_packed, cim=True, pallas=True), clamps=True,
+    tiles=_packed_tiles,
 )
 register_backend("corrected/jnp/none", _corrected_jnp, clamps=True)
 register_backend("bitplane/jnp/none", _bitplane_jnp, clamps=True)

@@ -16,6 +16,7 @@ All functions are pure and jit-safe.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -157,6 +158,55 @@ def pack_ternary(t: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
         return jnp.moveaxis(packed, 0, axis)
 
     return _pack(m1), _pack(m2)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("pos", "neg", "scale"),
+    meta_fields=("k", "n"),
+)
+@dataclasses.dataclass(frozen=True)
+class PackedPlanes:
+    """Stored 2-bit bitplanes in the *canonical kernel layout*.
+
+    ``pos``/``neg`` are the packed (M1, M2) uint8 planes, already padded
+    along their last two dims to the packed-kernel tile granularity
+    (``repro.core.execution.canonical_plane_layout``) so the serving
+    jaxpr never re-pads or re-lays-out the weight side per step;
+    ``scale`` is the per-output-channel weight scale over the *logical*
+    channels. ``k``/``n`` record the logical contraction/output dims so
+    results slice back exactly (pad plane cells are (0, 0) cells — inert
+    under the a/b event-count semantics).
+
+    Registered as a jax pytree (``k``/``n`` are static metadata), so a
+    tree of PackedPlanes flows through ``jax.device_put`` /
+    ``dist.sharding.packed_specs`` unchanged. Iterating yields
+    ``(pos, neg, scale)`` — the legacy ``pack_params`` tuple shape.
+
+    Stacked-layer weights keep their leading layer dim on the planes;
+    :meth:`layer` slices out one layer's planes for
+    ``repro.api.execute_packed``.
+    """
+
+    pos: jax.Array
+    neg: jax.Array
+    scale: jax.Array
+    k: int
+    n: int
+
+    def __iter__(self):
+        return iter((self.pos, self.neg, self.scale))
+
+    def layer(self, i: int) -> "PackedPlanes":
+        """One layer's (K/8, N) planes from a stacked (L, K/8, N) entry."""
+        if self.pos.ndim < 3:
+            raise ValueError(
+                f"layer() needs stacked (L, K/8, N) planes, got {self.pos.shape}"
+            )
+        return PackedPlanes(
+            pos=self.pos[i], neg=self.neg[i], scale=self.scale[i],
+            k=self.k, n=self.n,
+        )
 
 
 def unpack_ternary(p1: jax.Array, p2: jax.Array, axis: int = 0, dtype=jnp.int8) -> jax.Array:

@@ -227,17 +227,22 @@ def cache_specs(caches: PyTree, mesh, batch: int) -> PyTree:
 
 
 def packed_specs(
-    packed: Dict[str, Tuple], axis_sizes: Optional[Dict[str, int]] = None
-) -> Dict[str, Tuple]:
-    """PartitionSpecs for a ``quant.prepare.pack_params`` packed dict:
-    ``{path: (pos_plane, neg_plane, scale)}`` with planes shaped
-    (..., K/8, N) and scales (..., 1, N).
+    packed: Dict[str, Any], axis_sizes: Optional[Dict[str, int]] = None
+) -> Dict[str, Any]:
+    """PartitionSpecs for a ``quant.prepare`` packed dict — either the
+    legacy ``{path: (pos_plane, neg_plane, scale)}`` tuples or the
+    canonical ``{path: PackedPlanes}`` layout ``prepare_for_spec`` emits
+    (a registered pytree, so one structure-preserving tree map covers
+    both; the canonical layout is consumed unchanged — no re-layout
+    between prepare and placement). Planes are (..., K/8, N), scales
+    (..., 1, N).
 
     Every entry shards the output-channel dim N over "model" — the planes
     are packed 2-bit *along K*, so splitting K would tear u8 bytes apart,
     while an N split keeps each device streaming only the plane columns
     its TP shard consumes (the "each device streams only its 2-bit weight
-    shard" contract). Leaves whose N doesn't divide stay replicated."""
+    shard" contract). Leaves whose N doesn't divide stay replicated (the
+    canonical padded N is a 128 multiple, so typical TP degrees divide)."""
 
     def leaf_spec(leaf):
         spec: List = [None] * leaf.ndim
@@ -245,10 +250,7 @@ def packed_specs(
             spec[-1] = "model"
         return P(*spec)
 
-    return {
-        path: tuple(leaf_spec(leaf) for leaf in entry)
-        for path, entry in packed.items()
-    }
+    return jax.tree.map(leaf_spec, packed)
 
 
 # ---------------------------------------------------------------------------

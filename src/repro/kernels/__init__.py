@@ -11,7 +11,10 @@ Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU with interpret=True.
 """
 from repro.kernels.ops import cim_matmul, exact_ternary_matmul  # noqa: F401
-from repro.kernels.packed_mac import packed_cim_matmul  # noqa: F401
+from repro.kernels.packed_mac import (  # noqa: F401
+    packed_cim_matmul,
+    packed_cim_matmul_decode,
+)
 from repro.kernels.ternary_mac import (  # noqa: F401
     ternary_cim_matmul,
     ternary_exact_matmul,

@@ -1,20 +1,34 @@
-"""Pallas TPU kernel: bitplane-packed ternary CiM matmul.
+"""Pallas TPU kernels: bitplane-packed ternary CiM matmul.
 
 The SiTe CiM cell stores a ternary weight as two binary bit-cells (M1,
-M2). This kernel keeps weights in exactly that differential format, packed
-8-per-byte along K (repro.core.ternary.pack_ternary): two uint8 arrays of
-shape (K/8, N). Per ternary weight that is 2 bits of HBM traffic — 8x
-less than int8 and 16x less than bf16, which is the win in the
-weight-streaming-bound decode regime (see EXPERIMENTS.md §Perf).
+M2). These kernels keep weights in exactly that differential format,
+packed 8-per-byte along K (repro.core.ternary.pack_ternary): two uint8
+arrays of shape (K/8, N). Per ternary weight that is 2 bits of HBM
+traffic — 8x less than int8 and 16x less than bf16, which is the win in
+the weight-streaming-bound decode regime (see EXPERIMENTS.md §Perf).
 
-In-kernel, the bitplanes are expanded to ternary bf16 in VMEM (cheap VPU
-work overlapped with the MXU) and fed to the same a/b-decomposition CiM
-MAC as kernels/ternary_mac.py.
+Two variants share the format (DESIGN.md §9):
+
+  * :func:`packed_cim_matmul` — the prefill-shaped kernel (M-tiled grid,
+    bf16 operands, f32 accumulation). In-kernel, the bitplanes are
+    expanded to ternary bf16 in VMEM (cheap VPU work overlapped with the
+    MXU) and fed to the same a/b-decomposition CiM MAC as
+    kernels/ternary_mac.py.
+  * :func:`packed_cim_matmul_decode` — the decode-shaped (small-M)
+    variant: the whole M extent rides inside every grid step (grid is
+    (N, K) only), so each (k, j) plane tile is unpacked exactly once per
+    call instead of once per M-tile, and the a/b event counts — small
+    integers bounded by ``block`` — are computed and accumulated in
+    int32 from int8 operands. Bit-identical to the prefill kernel
+    (integer event counts are exact in both f32 and int32).
 
 VMEM budget per grid step, default (bm, bk, bn) = (128, 256, 128):
   x: 128*256*2 = 64 KiB; packed planes: 2 * (256/8)*128 = 8 KiB;
   unpacked w: 256*128*2 = 64 KiB; out: 64 KiB; intermediates
   2*(256/16)*128*128*4 = 2 MiB  -> ~2.2 MiB, fine for double buffering.
+Decode variant, default (bk, bn) = (256, 128) at M <= 8: the x tile is
+8*256*1 = 2 KiB int8 and the intermediates 2*(256/16)*8*128*4 = 128 KiB
+— the grid-step footprint shrinks ~16x with the M extent.
 """
 from __future__ import annotations
 
@@ -32,12 +46,17 @@ DEFAULT_BLOCK = 16
 DEFAULT_ADC_MAX = 8
 
 
-def _unpack_plane(plane: jax.Array) -> jax.Array:
-    """(bk/8, bn) uint8 -> (bk, bn) {0,1} float32 bits, K-major order."""
+def _unpack_plane_bits(plane: jax.Array, dtype) -> jax.Array:
+    """(bk/8, bn) uint8 -> (bk, bn) {0,1} bits in ``dtype``, K-major."""
     kp, bn = plane.shape
     shifts = jax.lax.broadcasted_iota(jnp.uint8, (kp, 8, bn), 1)
     bits = (plane[:, None, :] >> shifts) & jnp.uint8(1)
-    return bits.reshape(kp * 8, bn).astype(jnp.float32)
+    return bits.reshape(kp * 8, bn).astype(dtype)
+
+
+def _unpack_plane(plane: jax.Array) -> jax.Array:
+    """(bk/8, bn) uint8 -> (bk, bn) {0,1} float32 bits, K-major order."""
+    return _unpack_plane_bits(plane, jnp.float32)
 
 
 def _packed_kernel(x_ref, wp_ref, wn_ref, o_ref, *, sub, adc_max, cim):
@@ -112,6 +131,94 @@ def packed_cim_matmul(
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_pos, w_neg)
+
+
+def _packed_decode_kernel(x_ref, wp_ref, wn_ref, o_ref, *, sub, adc_max, cim):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (m, bk) int8 ternary values
+    w = _unpack_plane_bits(wp_ref[...], jnp.int8) - _unpack_plane_bits(
+        wn_ref[...], jnp.int8
+    )  # (bk, bn) int8
+    m, bk = x.shape
+    bn = w.shape[-1]
+    if not cim:
+        o_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        return
+    kb = bk // sub
+    xb = x.reshape(m, kb, sub).swapaxes(0, 1)
+    wb = w.reshape(kb, sub, bn)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    p = jax.lax.dot_general(xb, wb, dims, preferred_element_type=jnp.int32)
+    mm = jax.lax.dot_general(
+        jnp.abs(xb), jnp.abs(wb), dims, preferred_element_type=jnp.int32
+    )
+    # a/b are the RBL1/RBL2 discharge-event counts: small non-negative
+    # integers bounded by `sub` (TiM-DNN's partial-sum range analysis),
+    # so the halving and the clamp stay exact integer arithmetic
+    a = (mm + p) // 2
+    b = (mm - p) // 2
+    part = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
+    o_ref[...] += jnp.sum(part, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "adc_max", "cim", "bk", "bn", "interpret"),
+)
+def packed_cim_matmul_decode(
+    x: jax.Array,
+    w_pos: jax.Array,
+    w_neg: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+    cim: bool = True,
+    bk: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode-shaped packed MAC: x (M, K) int8 ternary values with a
+    *small* M (the whole extent rides in every grid step — callers pad M
+    to the decode tile, 8, not to 128); w_pos/w_neg (K/8, N) packed
+    bitplanes.
+
+    The grid is (N/bn, K/bk): with no M grid dimension each (k, j) plane
+    tile is unpacked exactly once per call, and the per-16-row a/b event
+    counts accumulate in int32 (they are bounded by ``block``, so the
+    integer pipeline is bit-identical to the f32 prefill kernel — pinned
+    in tests/test_decode_fastpath.py). Returns int32 (M, N).
+    """
+    m_dim, k_dim = x.shape
+    kp, n_dim = w_pos.shape
+    assert w_neg.shape == w_pos.shape
+    assert kp * 8 == k_dim, (x.shape, w_pos.shape)
+    assert m_dim <= 128, f"decode kernel is for small M, got {m_dim}"
+    assert k_dim % bk == 0 and n_dim % bn == 0
+    assert bk % (8 * block) == 0 or not cim
+    grid = (n_dim // bn, k_dim // bk)
+    kernel = functools.partial(
+        _packed_decode_kernel, sub=block, adc_max=int(adc_max), cim=cim
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_dim, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bk // 8, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((bk // 8, bn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m_dim, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(x, w_pos, w_neg)

@@ -15,9 +15,11 @@ the paper's technique as a first-class mode switch:
 Every ternary MAC goes through ``repro.core.execution.execute``: the
 ``QuantConfig`` mode (plus an optional explicit ``exec_spec`` override)
 resolves to a declarative ``CiMExecSpec``, and the registry picks the
-kernel. Scales: output = (x_t @ w_t) * sx * sw  — per-tensor activation
-scale, per-output-channel weight scale, both folded after the ternary
-MAC, which is exactly where the TiM-DNN peripheral applies them.
+kernel. Scales: output = (x_t @ w_t) * sx * sw  — activation scale
+(per-tensor by default, per-row under ``QuantConfig.act_scale=
+"per_row"`` for row-independent batched serving) and per-output-channel
+weight scale, both folded after the ternary MAC, which is exactly where
+the TiM-DNN peripheral applies them.
 """
 from __future__ import annotations
 
@@ -84,6 +86,15 @@ class QuantConfig:
     block: int = 16              # N_A rows per CiM cycle
     adc_max: int = 8             # 3-bit ADC + extra SA
     quantize_activations: bool = True
+    # Activation-scale granularity. "per_tensor" (default, the TiM-DNN
+    # peripheral's single scale) couples every row of a batched MAC
+    # through one amax — co-batched serving rows then perturb each other.
+    # "per_row" scales each (..., K) row independently (the per-input
+    # granularity RRAM ternary-TNN work like Laborieux et al. uses):
+    # fused-batch rows become numerically independent, so quantized
+    # fused/TP serving is exactly token-identical to per-request
+    # generate() (DESIGN.md §9; pinned in tests/test_tp_serve.py).
+    act_scale: str = "per_tensor"   # per_tensor | per_row
     corrected: bool = False      # clip-as-correction formulation (perf opt)
     # TWN threshold factor: delta = factor * E[|w|] (Li et al.)
     threshold_factor: float = tern.TWN_THRESHOLD_FACTOR
@@ -110,6 +121,10 @@ class QuantConfig:
             raise ValueError(self.mode)
         if self.tp_reduce not in ("none", "int8"):
             raise ValueError(f"unknown tp_reduce {self.tp_reduce!r}")
+        if self.act_scale not in ("per_tensor", "per_row"):
+            raise ValueError(
+                f"unknown act_scale {self.act_scale!r} (per_tensor | per_row)"
+            )
         if self.tp_reduce != "none" and self.mode == "off":
             raise ValueError(
                 "tp_reduce compresses the quantized dense path's TP "
@@ -162,10 +177,19 @@ def _ternarize_weight(
 
 
 def _ternarize_act(
-    x: jax.Array, factor: float = tern.TWN_THRESHOLD_FACTOR
+    x: jax.Array,
+    factor: float = tern.TWN_THRESHOLD_FACTOR,
+    per_row: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-tensor activation ternarization with STE; returns (x_t, scale)."""
-    t, scale = tern.ternarize(x, factor=factor)
+    """Activation ternarization with STE; returns (x_t, scale).
+
+    ``per_row=False``: one scale for the whole tensor (scalar).
+    ``per_row=True``: threshold and scale per (..., K) row — shape
+    (..., 1) — so each batched row quantizes independently of its
+    batchmates (row-independent numerics; DESIGN.md §9).
+    """
+    axis = (x.ndim - 1,) if per_row else None
+    t, scale = tern.ternarize(x, axis=axis, factor=factor)
     x_t = t + (x - jax.lax.stop_gradient(x))  # value-exact STE
     return x_t, jax.lax.stop_gradient(scale)
 
@@ -209,7 +233,8 @@ def dense(
         else:
             w_t, sw = _ternarize_weight(w, qc.threshold_factor)
         if qc.quantize_activations:
-            x_t, sx = _ternarize_act(x, qc.threshold_factor)
+            x_t, sx = _ternarize_act(x, qc.threshold_factor,
+                                     per_row=qc.act_scale == "per_row")
         else:
             x_t, sx = x, jnp.ones((), x.dtype)
         # One dispatch point for every ternary MAC: the spec (derived from

@@ -1,2 +1,6 @@
 """Quantization preparation: offline ternarization + 2-bit packing."""
-from repro.quant.prepare import pack_params, ternarize_params  # noqa: F401
+from repro.quant.prepare import (  # noqa: F401
+    pack_params,
+    prepare_for_spec,
+    ternarize_params,
+)

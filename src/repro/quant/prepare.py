@@ -25,7 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ternary as tern
-from repro.core.execution import CiMExecSpec
+from repro.core.execution import (
+    CiMExecSpec,
+    _pad_axis,
+    canonical_plane_layout,
+)
 from repro.dist.sharding import tree_paths
 
 PyTree = Any
@@ -89,35 +93,69 @@ def pack_params(
     return jax.tree_util.tree_unflatten(treedef, out), packed
 
 
+def _canonicalize_packed(
+    packed: Dict[str, Tuple], spec: CiMExecSpec
+) -> Dict[str, tern.PackedPlanes]:
+    """Pad each packed (p1, p2, scale) entry to the **canonical kernel
+    layout** for ``spec`` (``execution.canonical_plane_layout``): plane
+    rows to the tile K granularity, plane columns to the tile N
+    granularity. Pad cells are (0, 0) bit pairs — weight 0, inert under
+    the a/b event-count semantics — and the logical (K, N) are recorded
+    on the :class:`repro.core.ternary.PackedPlanes` so
+    ``api.execute_packed`` slices results back exactly. This moves the
+    pad/relayout the serving step used to re-trace *every decode step*
+    to prepare time, once."""
+    k_mult, n_mult = canonical_plane_layout(spec)
+    rows = k_mult // 8
+    out: Dict[str, tern.PackedPlanes] = {}
+    for path, (p1, p2, scale) in packed.items():
+        k, n = p1.shape[-2] * 8, p1.shape[-1]
+        p1 = _pad_axis(_pad_axis(p1, rows, p1.ndim - 2), n_mult, p1.ndim - 1)
+        p2 = _pad_axis(_pad_axis(p2, rows, p2.ndim - 2), n_mult, p2.ndim - 1)
+        out[path] = tern.PackedPlanes(pos=p1, neg=p2, scale=scale, k=k, n=n)
+    return out
+
+
 def prepare_for_spec(
     params: PyTree,
     spec: CiMExecSpec,
     factor: float = tern.TWN_THRESHOLD_FACTOR,
     mesh=None,
+    canonical: bool = True,
 ):
     """Offline surgery matched to the serving execution spec.
 
     packing="none"        -> ternarize + fold scales (pre_quantized path).
     packing="bitplane_u8" -> additionally emit the packed (M1, M2)
-                             bitplanes per weight, the layout the packed
-                             kernels stream from HBM. Feed each
-                             ``packed[path] = (p1, p2, scale)`` entry to
-                             ``repro.api.execute_packed(spec, x, p1, p2)``
-                             (folding ``scale`` after the MAC) — that is
-                             the path that avoids per-call packing.
+                             bitplanes per weight in the **canonical
+                             kernel layout**: each ``packed[path]`` is a
+                             :class:`repro.core.ternary.PackedPlanes`
+                             whose planes are pre-padded to the packed
+                             kernels' tile granularity with the logical
+                             (K, N) recorded. Feed an entry (or its
+                             ``.layer(i)`` slice for stacked weights) to
+                             ``repro.api.execute_packed(spec, x, entry)``
+                             (folding ``.scale`` after the MAC): the
+                             serving jaxpr then contains no per-step
+                             plane padding or relayout. ``canonical=
+                             False`` keeps the raw ``(p1, p2, scale)``
+                             tuples at logical extents (legacy layout).
 
     ``mesh``: place the surgery outputs for tensor-parallel serving —
     folded params land under ``dist.sharding.param_specs`` and packed
     planes under ``packed_specs`` (N-sharded: each device stores only
-    the 2-bit plane columns its TP shard consumes). The surgery itself
-    runs replicated (it is one-off, and per-channel thresholds need the
-    full K column anyway); only the *results* are sharded.
+    the 2-bit plane columns its TP shard consumes; the canonical padded
+    N is a tile multiple, so it divides typical TP degrees). The surgery
+    itself runs replicated (it is one-off, and per-channel thresholds
+    need the full K column anyway); only the *results* are sharded.
 
     Returns ``params`` for "none", ``(params, packed)`` for bitplane
     packing — mirroring :func:`ternarize_params` / :func:`pack_params`.
     """
     if spec.packing == "bitplane_u8":
         prepared, packed = pack_params(params, factor=factor)
+        if canonical:
+            packed = _canonicalize_packed(packed, spec)
         if mesh is not None:
             prepared, packed = _shard_prepared(prepared, packed, mesh)
         return prepared, packed

@@ -194,10 +194,19 @@ class ContinuousBatcher:
     ``prepare_weights=True`` runs ``quant.prepare.prepare_for_spec`` once
     at construction so the per-step STE re-quantization is skipped
     (``pre_quantized``); for a bitplane-packed spec the stored 2-bit
-    planes are kept on ``self.packed``, reusable across steps by
-    ``api.execute_packed`` callers, and the in-model dense path serves
-    from the folded ternary weights (packing downgraded to "none" so
-    nothing re-packs per forward).
+    planes are kept on ``self.packed`` as canonical
+    ``repro.core.ternary.PackedPlanes`` — pre-padded to the packed
+    kernels' tile granularity with the logical (K, N) recorded, so
+    ``api.execute_packed`` callers stream them across steps with zero
+    per-step padding/relayout (DESIGN.md §9) — and the in-model dense
+    path serves from the folded ternary weights (packing downgraded to
+    "none" so nothing re-packs per forward).
+
+    Quantized fused serving is **exactly** token-identical to
+    per-request ``generate()`` when the quant config uses
+    ``act_scale="per_row"`` (row-independent activation quantization);
+    the default per-tensor scale couples co-batched rows through one
+    amax (DESIGN.md §9).
 
     ``mesh`` turns on tensor-parallel serving (DESIGN.md §8): params are
     sharded under ``dist.sharding.param_specs`` (attention/FFN column- and

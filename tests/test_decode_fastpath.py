@@ -1,0 +1,337 @@
+"""Decode-shaped ternary MAC fast path (DESIGN.md §9).
+
+The contract pinned here:
+
+  * shape-aware dispatch: every registered spec is **bit-equal** between
+    the decode-tile path (auto, M <= DECODE_M_MAX) and the forced
+    prefill-tile path (the pre-§9 behaviour) across ragged decode M;
+  * the decode packed kernel's int32 a/b accumulation is bit-identical
+    to the f32 prefill kernel (the event counts are small integers);
+  * prepare-time canonical planes round-trip through execute_packed
+    (both backends, solo and TP-sharded) and delete the per-step plane
+    pad/relayout from the serving jaxpr — and on decode shapes the
+    pallas kernel pads M only to the 8-row decode tile, never to 128
+    (the acceptance jaxpr pin);
+  * tile tables / autotune: winners are cached per (spec, shape-class)
+    and picked up by later executes; the override lever restores the
+    pre-§9 tiles for old-vs-new benchmarking.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import ternary as tern
+from repro.core.execution import (
+    DECODE_M_MAX,
+    clear_tile_cache,
+    set_shape_class_override,
+    shape_class,
+    tiles_for,
+)
+from repro.kernels.packed_mac import packed_cim_matmul, packed_cim_matmul_decode
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.quant.prepare import prepare_for_spec
+
+ALL_SPECS = list(api.registered_specs())
+RAGGED_M = (1, 2, 3, 5, 7)
+
+
+def rand_ternary(key, shape, p_zero=0.25, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(dtype)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tile_state():
+    yield
+    set_shape_class_override(None)
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# Shape-sweep bit-equality: decode tiles vs the pre-§9 prefill path
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeTileEquivalence:
+    @pytest.mark.parametrize("spec", ALL_SPECS, ids=lambda s: s.name)
+    def test_decode_bit_equal_to_prefill_tiles(self, spec):
+        """For every registered (formulation, backend, packing) and
+        every ragged decode M, the small-M tile path returns the same
+        bits as the forced 128-row prefill path (integer event counts
+        are exact under any tiling/accumulation order)."""
+        k, n = 45, 19  # ragged K (not a block multiple) and ragged N
+        kx, kw = jax.random.split(jax.random.PRNGKey(11))
+        w = rand_ternary(kw, (k, n), p_zero=0.1)
+        for m in RAGGED_M:
+            x = rand_ternary(jax.random.fold_in(kx, m), (m, k), p_zero=0.1)
+            decode = np.asarray(api.execute(spec, x, w))
+            set_shape_class_override("prefill")
+            try:
+                prefill = np.asarray(api.execute(spec, x, w))
+            finally:
+                set_shape_class_override(None)
+            np.testing.assert_array_equal(
+                decode, prefill, err_msg=f"{spec.name} M={m}")
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("formulation", ["blocked", "exact"])
+    def test_execute_packed_decode_bit_equal(self, formulation, backend):
+        """Same sweep over the stored-plane fast path."""
+        k, n = 96, 24
+        spec = api.CiMExecSpec(formulation=formulation, backend=backend,
+                               packing="bitplane_u8")
+        kx, kw = jax.random.split(jax.random.PRNGKey(5))
+        t = rand_ternary(kw, (k, n), p_zero=0.1, dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        for m in RAGGED_M:
+            x = rand_ternary(jax.random.fold_in(kx, m), (m, k), p_zero=0.1)
+            decode = np.asarray(api.execute_packed(spec, x, p1, p2))
+            set_shape_class_override("prefill")
+            try:
+                prefill = np.asarray(api.execute_packed(spec, x, p1, p2))
+            finally:
+                set_shape_class_override(None)
+            np.testing.assert_array_equal(
+                decode, prefill, err_msg=f"{spec.name} M={m}")
+
+
+# ---------------------------------------------------------------------------
+# int32 vs f32 accumulation (the decode kernel's integer pipeline)
+# ---------------------------------------------------------------------------
+
+
+class TestInt32Accumulation:
+    @pytest.mark.parametrize("cim", [True, False], ids=["blocked", "exact"])
+    def test_decode_kernel_int32_equals_prefill_f32(self, cim):
+        """packed_cim_matmul_decode (int8 operands, int32 a/b counts) ==
+        packed_cim_matmul (bf16 operands, f32 accumulation), bit for
+        bit, across a multi-tile (K, N) grid: the event counts are
+        integers bounded by block, exact in both pipelines."""
+        m, k, n = 8, 512, 256
+        kx, kw = jax.random.split(jax.random.PRNGKey(7))
+        x = rand_ternary(kx, (m, k), p_zero=0.1)
+        t = rand_ternary(kw, (k, n), p_zero=0.1, dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        xp = jnp.pad(x, ((0, 128 - m), (0, 0)))
+        f32 = np.asarray(packed_cim_matmul(
+            xp.astype(jnp.bfloat16), p1, p2, cim=cim, interpret=True))[:m]
+        i32 = np.asarray(packed_cim_matmul_decode(
+            x.astype(jnp.int8), p1, p2, cim=cim, interpret=True))
+        assert i32.dtype == np.int32
+        np.testing.assert_array_equal(f32, i32.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Prepare-time canonical planes
+# ---------------------------------------------------------------------------
+
+
+def _smoke_planes(backend):
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    spec = api.CiMExecSpec(formulation="blocked", backend=backend,
+                           packing="bitplane_u8")
+    _, packed = prepare_for_spec(params, spec)
+    return spec, packed
+
+
+class TestCanonicalPlanes:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_roundtrip_through_execute_packed(self, backend):
+        """Canonical (pre-padded) planes return the same bits as the
+        dense-weight execute path, sliced back to the logical N."""
+        spec, packed = _smoke_planes(backend)
+        entry = packed["blocks/attn/wq"]
+        assert isinstance(entry, tern.PackedPlanes)
+        k_mult, n_mult = api.canonical_plane_layout(spec)
+        assert entry.pos.shape[-2] * 8 % k_mult == 0
+        assert entry.pos.shape[-1] % n_mult == 0
+        lay = entry.layer(0)
+        x = rand_ternary(jax.random.PRNGKey(1), (3, lay.k), p_zero=0.1)
+        out = api.execute_packed(spec, x, lay)
+        assert out.shape == (3, lay.n)
+        t = tern.unpack_ternary(lay.pos, lay.neg, axis=0)
+        t = t[: lay.k, : lay.n].astype(jnp.float32)
+        expect = api.execute(
+            dataclasses.replace(spec, packing="none"), x, t)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_legacy_tuple_layout_still_available(self):
+        """canonical=False keeps the raw (p1, p2, scale) tuples at
+        logical extents (the pack_params layout)."""
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               packing="bitplane_u8")
+        _, packed = prepare_for_spec(params, spec, canonical=False)
+        p1, p2, scale = packed["blocks/attn/wq"]
+        assert isinstance(packed["blocks/attn/wq"], tuple)
+        assert p1.shape[-2] * 8 == cfg.d_model
+
+    def test_packed_planes_validation(self):
+        spec, packed = _smoke_planes("jnp")
+        entry = packed["blocks/attn/wq"]
+        lay = entry.layer(0)
+        x = rand_ternary(jax.random.PRNGKey(2), (2, lay.k))
+        with pytest.raises(ValueError, match="stacked"):
+            api.execute_packed(spec, x, entry)  # un-sliced stacked planes
+        with pytest.raises(ValueError, match="alone"):
+            api.execute_packed(spec, x, lay, lay.neg)
+        with pytest.raises(ValueError, match="mismatch"):
+            api.execute_packed(spec, x[:, :-8], lay)
+        with pytest.raises(ValueError, match="stacked"):
+            lay.layer(0)
+
+    def test_sharded_canonical_planes_bit_equal(self, tp_mesh):
+        """prepare_for_spec(mesh=...) lands the canonical planes
+        N-sharded over "model" and execute_packed over the sharded
+        planes is bit-equal to the replicated result."""
+        from jax.sharding import NamedSharding
+        from repro.launch.mesh import make_tp_mesh
+
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        spec = api.CiMExecSpec(formulation="blocked", backend="jnp",
+                               packing="bitplane_u8")
+        _, base = prepare_for_spec(params, spec)
+        mesh = make_tp_mesh(2)
+        _, packed = prepare_for_spec(params, spec, mesh=mesh)
+        sharded = 0
+        for path, entry in packed.items():
+            ns = entry.pos.sharding
+            assert isinstance(ns, NamedSharding), path
+            if ns.spec[-1] == "model":
+                sharded += 1
+        assert sharded > 0, "no canonical plane picked up the model axis"
+        lay_b, lay_s = base["blocks/attn/wq"].layer(0), \
+            packed["blocks/attn/wq"].layer(0)
+        x = rand_ternary(jax.random.PRNGKey(3), (4, lay_b.k), p_zero=0.1)
+        np.testing.assert_array_equal(
+            np.asarray(api.execute_packed(spec, x, lay_b)),
+            np.asarray(api.execute_packed(spec, x, lay_s)))
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr pins: no per-step plane pad, no M-to-128 pad on decode shapes
+# ---------------------------------------------------------------------------
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for u in vs:
+                if hasattr(u, "eqns"):
+                    yield from _iter_eqns(u)
+                elif hasattr(u, "jaxpr"):
+                    yield from _iter_eqns(u.jaxpr)
+
+
+def _trace_packed(spec, planes, m):
+    x = rand_ternary(jax.random.PRNGKey(4), (m, planes.k), p_zero=0.1)
+
+    def f(x, pos, neg):
+        lay = tern.PackedPlanes(pos=pos, neg=neg, scale=planes.scale,
+                                k=planes.k, n=planes.n)
+        return api.execute_packed(spec, x, lay)
+
+    return jax.make_jaxpr(f)(x, planes.pos, planes.neg)
+
+
+class TestServingJaxpr:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_canonical_planes_never_padded_per_step(self, backend):
+        """The acceptance pin for prepare-time canonicalization: with
+        canonical planes the traced step contains **no** pad on any
+        uint8 (plane) operand — the pad moved to prepare time."""
+        spec, packed = _smoke_planes(backend)
+        lay = packed["blocks/attn/wq"].layer(0)
+        closed = _trace_packed(spec, lay, m=3)
+        u8_pads = [
+            e for e in _iter_eqns(closed.jaxpr)
+            if e.primitive.name == "pad"
+            and any(getattr(v.aval, "dtype", None) == jnp.uint8
+                    for v in e.invars)
+        ]
+        assert not u8_pads, u8_pads
+
+    def test_decode_shape_pads_m_to_decode_tile_not_128(self):
+        """The acceptance pin for shape-aware dispatch: on a decode
+        shape (M=3) the pallas packed kernel consumes x padded to the
+        8-row decode tile; under the forced pre-§9 prefill class the
+        same trace pads M to 128 (sensitivity check)."""
+        spec, packed = _smoke_planes("pallas")
+        lay = packed["blocks/attn/wq"].layer(0)
+
+        def m_dims(closed):
+            dims = set()
+            for e in _iter_eqns(closed.jaxpr):
+                if e.primitive.name == "pallas_call":
+                    dims |= {v.aval.shape[0] for v in e.invars
+                             if getattr(v.aval, "ndim", 0) == 2}
+            return dims
+
+        decode_dims = m_dims(_trace_packed(spec, lay, m=3))
+        assert decode_dims, "no pallas_call traced"
+        assert 128 not in decode_dims and DECODE_M_MAX in decode_dims, \
+            decode_dims
+        set_shape_class_override("prefill")
+        try:
+            prefill_dims = m_dims(_trace_packed(spec, lay, m=3))
+        finally:
+            set_shape_class_override(None)
+        assert 128 in prefill_dims, prefill_dims
+
+
+# ---------------------------------------------------------------------------
+# Tile tables / autotune
+# ---------------------------------------------------------------------------
+
+
+class TestTileDispatch:
+    def test_shape_class_boundary(self):
+        assert shape_class(1) == "decode"
+        assert shape_class(DECODE_M_MAX) == "decode"
+        assert shape_class(DECODE_M_MAX + 1) == "prefill"
+
+    def test_tiles_for_classes(self):
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas",
+                               packing="bitplane_u8")
+        bm_d, _, _ = tiles_for(spec, 2, 256, 128)
+        bm_p, _, _ = tiles_for(spec, 256, 256, 128)
+        assert bm_d <= DECODE_M_MAX < bm_p
+        # jnp backends have no tile dimension
+        assert tiles_for(
+            api.CiMExecSpec(formulation="blocked", backend="jnp"),
+            2, 256, 128) is None
+
+    def test_override_validation(self):
+        with pytest.raises(ValueError, match="shape class"):
+            set_shape_class_override("training")
+
+    def test_autotune_caches_winner(self):
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas",
+                               packing="bitplane_u8")
+        report = api.autotune(spec, shapes=((2, 256, 128),), repeats=1)
+        assert set(report) == {"decode"}
+        winner = tuple(report["decode"]["tiles"])
+        assert winner in {tuple(map(int, c.split("x")))
+                          for c in report["decode"]["candidates"]}
+        # the winner is what tiles_for now answers — and clears cleanly
+        assert tiles_for(spec, 2, 256, 128) == winner
+        clear_tile_cache()
+        assert tiles_for(spec, 2, 256, 128) == (8, 256, 128)
+
+    def test_autotune_rejects_untiled_backend(self):
+        with pytest.raises(ValueError, match="tile"):
+            api.autotune(api.CiMExecSpec(formulation="blocked",
+                                         backend="jnp"))

@@ -18,8 +18,10 @@ here (DESIGN.md §8):
     fused step independent of n_slots AND mesh size, and
     host_syncs/decode_steps unchanged by TP;
   * the PR-2 known limit (per-tensor activation scale couples batch
-    rows) is pinned as a strict xfail: a per-row-scale fix must flip it
-    deliberately.
+    rows) is **retired** by ``QuantConfig(act_scale="per_row")``
+    (DESIGN.md §9): quantized dense rows are bit-identical solo vs
+    co-batched, and quantized fused serving is token-identical to
+    per-request generate() — the former strict xfail, now passing.
 """
 import jax
 import jax.numpy as jnp
@@ -324,30 +326,58 @@ class TestTPInvariants:
 
 
 # ---------------------------------------------------------------------------
-# Known-limit pin (PR-2 caveat): per-tensor activation scale couples rows
+# PR-2 caveat retired: per-row activation scales decouple batch rows
 # ---------------------------------------------------------------------------
 
 
-class TestBatchCouplingCaveat:
-    @pytest.mark.xfail(
-        strict=True,
-        reason="per-tensor activation scale couples co-batched rows "
-               "(DESIGN.md §6 caveat): a per-row-scale fix must flip "
-               "this pin deliberately",
-    )
-    def test_quantized_dense_row_independent_of_batchmates(self):
-        """A row's quantized dense() output would be bit-identical whether
-        it is computed alone or co-batched IF activation scales were
-        per-row. Today the scale is per-tensor (amax over the whole
-        batch), so adding a batchmate perturbs the row — this asserts the
-        fixed behaviour and is expected to FAIL until then."""
-        qc = QuantConfig(mode="cim")
+class TestPerRowActScale:
+    """The former strict xfail (per-tensor activation scale couples
+    co-batched rows), flipped deliberately by ``act_scale="per_row"``
+    (DESIGN.md §9)."""
+
+    def _rows(self):
         kx, kw = jax.random.split(jax.random.PRNGKey(3))
         x1 = jax.random.normal(kx, (1, 64), jnp.float32)
         mate = 5.0 * jax.random.normal(jax.random.PRNGKey(9), (1, 64),
                                        jnp.float32)
-        x2 = jnp.concatenate([x1, mate], axis=0)
         w = jax.random.normal(kw, (64, 32), jnp.float32)
+        return x1, jnp.concatenate([x1, mate], axis=0), w
+
+    def test_quantized_dense_row_independent_of_batchmates(self):
+        """A row's quantized dense() output is bit-identical whether it
+        is computed alone or co-batched: per-row thresholds/scales make
+        each (.., K) row's quantization a function of that row only."""
+        qc = QuantConfig(mode="cim", act_scale="per_row")
+        x1, x2, w = self._rows()
         solo = np.asarray(dense(x1, w, qc))[0]
         cobatched = np.asarray(dense(x2, w, qc))[0]
         np.testing.assert_array_equal(solo, cobatched)
+
+    def test_per_tensor_default_still_couples(self):
+        """The default per-tensor scale still couples rows (one amax over
+        the batch) — the documented trade the per_row option retires; if
+        this ever passes, the default granularity silently changed."""
+        qc = QuantConfig(mode="cim")
+        assert qc.act_scale == "per_tensor"
+        x1, x2, w = self._rows()
+        solo = np.asarray(dense(x1, w, qc))[0]
+        cobatched = np.asarray(dense(x2, w, qc))[0]
+        assert bool(np.any(solo != cobatched))
+
+    def test_quantized_fused_serving_token_identical_to_generate(self):
+        """The acceptance pin: under act_scale="per_row" the quantized
+        (cim) fused batcher serves every request token-identically to
+        per-request generate() — heterogeneous co-batched slots,
+        left-padded batched prefill and all."""
+        from repro.serve.engine import generate
+
+        qc = QuantConfig(mode="cim", act_scale="per_row")
+        cfg = _family_cfg("dense", qc)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        solos = [
+            np.asarray(generate(params, jnp.asarray([p], jnp.int32), cfg,
+                                max_new=m, s_max=32))[0].tolist()
+            for p, m in zip(PROMPTS, MAX_NEWS)
+        ]
+        toks, _ = _serve(params, cfg, None)
+        assert toks == solos
