@@ -1,0 +1,61 @@
+"""repro.analysis — static analysis for the tracing contracts that keep
+the serving fast paths honest (DESIGN.md §10).
+
+Two engines share one declarative vocabulary:
+
+  * the **jaxpr auditor** (:mod:`repro.analysis.jaxpr_audit`) traces a
+    function and checks :class:`TraceContract` rules — host-callback
+    caps, pad-free dtypes, forbidden primitives, Pallas accumulation
+    dtypes, equation-count invariance across config axes;
+  * the **source linter** (:mod:`repro.analysis.lint`) flags host-sync
+    idioms, tracer branching, static-arg hazards and unregistered
+    dataclasses in jit-reachable code.
+
+Contracts are registered at their definition sites
+(``core/execution.py``, ``kernels/packed_mac.py``, ``serve/engine.py``)
+and drive the tests, the ``python -m repro.analysis`` CLI, and the
+``ANALYSIS_baseline.json`` CI ratchet alike.
+"""
+from repro.analysis.contracts import (
+    PrimRule,
+    SkipTrace,
+    TraceContract,
+    TracePoint,
+    forbid_convert,
+    get_trace_contract,
+    register_trace_contract,
+    registered_trace_contracts,
+)
+from repro.analysis.jaxpr_audit import (
+    Finding,
+    audit,
+    audit_invariance,
+    check_jaxpr,
+    iter_eqns,
+    run_contract,
+    total_eqns,
+)
+from repro.analysis.lint import lint_paths, lint_source
+from repro.analysis.report import build_report, diff_against_baseline
+
+__all__ = [
+    "Finding",
+    "PrimRule",
+    "SkipTrace",
+    "TraceContract",
+    "TracePoint",
+    "audit",
+    "audit_invariance",
+    "build_report",
+    "check_jaxpr",
+    "diff_against_baseline",
+    "forbid_convert",
+    "get_trace_contract",
+    "iter_eqns",
+    "lint_paths",
+    "lint_source",
+    "register_trace_contract",
+    "registered_trace_contracts",
+    "run_contract",
+    "total_eqns",
+]

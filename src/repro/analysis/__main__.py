@@ -1,0 +1,21 @@
+"""``python -m repro.analysis`` — see repro.analysis.report.
+
+The mesh-size invariance axes of the serving contracts re-trace under
+2- and 4-way TP meshes, so the CLI forces virtual host devices *before*
+the first jax import (same bootstrap discipline as ``launch.serve``;
+jax locks the device count at first init). Keeps the report identical
+between a laptop run and the CI job."""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+from repro.analysis.report import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,196 @@
+"""Declarative tracing contracts — the vocabulary and the registry.
+
+A :class:`TraceContract` names the invariants one traced entry point
+must satisfy (DESIGN.md §10): how many host callbacks its jaxpr may
+contain, which dtypes must never be padded, which primitives are
+forbidden (optionally only inside / outside Pallas kernel bodies), what
+dtype Pallas dot accumulation must use, and which configuration axes
+the equation count must be *invariant* to (the "one batched program"
+serving discipline — jaxpr size independent of ``n_slots`` and mesh
+size).
+
+Contracts are declared **at the definition site**: ``serve/engine.py``,
+``core/execution.py`` and ``kernels/packed_mac.py`` each call
+:func:`register_trace_contract` next to the code whose discipline the
+contract pins. One registry then drives three consumers —
+
+  * the jaxpr auditor (``repro.analysis.jaxpr_audit.run_contract``),
+  * the migrated invariant tests (tests/test_serve.py et al.), and
+  * the ``python -m repro.analysis`` CLI / CI ratchet.
+
+This module is deliberately dependency-free (no jax import): importing
+it from kernel/serving modules at definition time costs nothing, and
+builders defer every heavy import until the auditor actually runs them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+#: severity ladder: P1 = contract violation / correctness-adjacent,
+#: P2 = performance or tracing hazard, P3 = hygiene / informational
+SEVERITIES = ("P1", "P2", "P3")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimRule:
+    """Forbid (occurrences of) one primitive, optionally predicated.
+
+    rule:   stable rule id for reports/baselines (kebab-case).
+    prim:   primitive name to match (``"pad"``, ``"pallas_call"`` …);
+            ``None`` matches every equation (predicate-only rules).
+    within: ``None`` = anywhere; ``"pallas_call"`` (or any primitive
+            name) = only inside that enclosing primitive's body;
+            ``"top"`` = only outside every sub-jaxpr.
+    when:   optional ``eqn -> bool`` refinement; the rule fires only
+            where it returns True. Keep predicates pure functions of
+            the equation (dtypes/shapes/params) so findings are
+            deterministic across runs.
+    reason: one line shown in the finding message.
+    """
+
+    rule: str
+    prim: Optional[str] = None
+    within: Optional[str] = None
+    when: Optional[Callable[[Any], bool]] = None
+    reason: str = ""
+
+
+def forbid_convert(
+    *,
+    from_kinds: Tuple[str, ...] = ("int",),
+    to: Tuple[str, ...] = ("float32", "float64"),
+    within: Optional[str] = "pallas_call",
+    rule: str = "no-f32-event-promotion",
+    reason: str = "integer ADC event counts must stay integer",
+) -> PrimRule:
+    """A :class:`PrimRule` forbidding ``convert_element_type`` from an
+    integer (or listed-kind) dtype to the listed float dtypes — the
+    regression class where int8/int32 ADC event counts get silently
+    promoted to f32 (cf. the sensing-error channel in RRAM ternary
+    TNNs, Laborieux et al.). Default scope: inside Pallas kernel
+    bodies, where the decode path's int32 accumulation contract lives.
+    """
+
+    def _is_kind(name: str, kinds) -> bool:
+        for kind in kinds:
+            # kind "int" covers every signed/unsigned width — both are
+            # integer event carriers
+            if kind == "int" and name.startswith(("int", "uint")):
+                return True
+            if name == kind:
+                return True
+        return False
+
+    def _when(eqn) -> bool:
+        new = str(eqn.params.get("new_dtype", ""))
+        if new not in to:
+            return False
+        src = [str(v.aval.dtype) for v in eqn.invars
+               if getattr(v, "aval", None) is not None]
+        return any(_is_kind(d, from_kinds) for d in src)
+
+    return PrimRule(
+        rule=rule, prim="convert_element_type", within=within, when=_when,
+        reason=reason,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceContract:
+    """The declarative rule set checked against one traced jaxpr.
+
+    max_host_callbacks: cap on host-callback primitives
+      (pure/io/debug callbacks) anywhere in the program — the fused
+      decode step pins 0: its single host fetch happens *outside* the
+      jitted step (DESIGN.md §6).
+    no_pad_on_dtypes: dtype names whose operands must never be padded
+      (``("uint8",)`` = the stored 2-bit planes enter kernels in their
+      canonical layout, zero per-step relayout — DESIGN.md §9).
+    forbid_prims: tuple of :class:`PrimRule`.
+    forbid_dtype_shapes: ``((dtype_name, shape), ...)`` — no equation
+      may *produce* an aval matching one of these (the §Perf A4
+      operand-dtype backward pin).
+    accum_dtype: every ``dot_general`` inside a Pallas kernel body must
+      accumulate (``preferred_element_type``) in exactly this dtype.
+    max_eqns: optional hard cap on the recursive equation count.
+
+    Equation-count *invariance* axes live on the :class:`TracePoint`
+    (they parameterize the builder, not the rule set).
+    """
+
+    max_host_callbacks: Optional[int] = None
+    no_pad_on_dtypes: Tuple[str, ...] = ()
+    forbid_prims: Tuple[PrimRule, ...] = ()
+    forbid_dtype_shapes: Tuple[Tuple[str, Tuple[int, ...]], ...] = ()
+    accum_dtype: Optional[str] = None
+    max_eqns: Optional[int] = None
+
+
+class SkipTrace(Exception):
+    """Raised by a builder when one axis combination cannot run here
+    (e.g. a 4-way mesh on a 1-device host). Recorded as a skip in the
+    run metadata — never a finding, never silently dropped."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TracePoint:
+    """A registered audit target: ``build(**axes)`` returns ``(fn,
+    args)`` for ``jax.make_jaxpr``; ``axes`` maps axis name to the
+    values swept for equation-count invariance (the auditor traces the
+    full cross product and requires one single count)."""
+
+    name: str
+    build: Callable[..., Tuple[Callable, tuple]]
+    contract: TraceContract
+    axes: Mapping[str, Tuple[Any, ...]] = dataclasses.field(default_factory=dict)
+
+
+_TRACE_REGISTRY: Dict[str, TracePoint] = {}
+
+#: modules whose import populates the registry — the definition sites.
+#: The CLI and the reproducibility test import these; adding a new
+#: contract-bearing module means adding it here.
+DEFAULT_CONTRACT_MODULES = (
+    "repro.core.execution",
+    "repro.kernels.packed_mac",
+    "repro.serve.engine",
+)
+
+
+def register_trace_contract(
+    name: str,
+    build: Callable[..., Tuple[Callable, tuple]],
+    contract: TraceContract,
+    *,
+    axes: Optional[Mapping[str, Tuple[Any, ...]]] = None,
+) -> TracePoint:
+    """Register ``name`` as an auditable trace point. Idempotent per
+    name (module reloads overwrite); names are dotted, rooted at the
+    defining package (``"serve.fused_decode_step"``)."""
+    point = TracePoint(name=name, build=build, contract=contract,
+                       axes=dict(axes or {}))
+    _TRACE_REGISTRY[name] = point
+    return point
+
+
+def get_trace_contract(name: str) -> TracePoint:
+    load_default_contracts()
+    try:
+        return _TRACE_REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_TRACE_REGISTRY))
+        raise KeyError(f"no trace contract {name!r} (known: {known})") from None
+
+
+def registered_trace_contracts() -> Tuple[TracePoint, ...]:
+    """Every registered point, sorted by name (deterministic reports)."""
+    load_default_contracts()
+    return tuple(_TRACE_REGISTRY[k] for k in sorted(_TRACE_REGISTRY))
+
+
+def load_default_contracts() -> None:
+    """Import the definition-site modules so their registrations run."""
+    for mod in DEFAULT_CONTRACT_MODULES:
+        importlib.import_module(mod)

@@ -1,0 +1,264 @@
+"""The jaxpr auditor: trace a function, walk every equation recursively
+(through pjit, scan, cond, custom_vjp, shard_map, pallas_call), and
+check the declarative :class:`~repro.analysis.contracts.TraceContract`
+rules against the program — plus equation-count invariance across the
+registered configuration axes (re-trace per axis value, assert one
+single count).
+
+Findings are plain data (rule id, severity, stable message) so the CLI
+report is byte-reproducible: messages embed only primitive names,
+dtypes, shapes and counts — never object ids, jaxpr variable names, or
+anything that varies between interpreter runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.contracts import (
+    PrimRule,
+    SkipTrace,
+    TraceContract,
+    TracePoint,
+    get_trace_contract,
+)
+
+#: primitives that call back into the host from inside a traced program
+HOST_CALLBACK_PRIMS = frozenset(
+    {"pure_callback", "io_callback", "debug_callback", "outside_call"}
+)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation. ``where`` is a contract name (jaxpr engine)
+    or a repo-relative ``path:line`` (lint engine)."""
+
+    severity: str
+    engine: str
+    rule: str
+    where: str
+    message: str
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Recursive equation walk
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    """Every nested jaxpr hiding in an equation's params — pjit/scan
+    carry ClosedJaxprs ("jaxpr"), cond a tuple of branches, custom_vjp
+    a "call_jaxpr", pallas_call a raw Jaxpr body."""
+    for val in eqn.params.values():
+        items = val if isinstance(val, (list, tuple)) else (val,)
+        for item in items:
+            if hasattr(item, "eqns"):  # Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr"):  # ClosedJaxpr
+                yield item.jaxpr
+
+
+def iter_eqns(jaxpr, within: Tuple[str, ...] = ()) -> Iterator[Tuple[Any, Tuple[str, ...]]]:
+    """Yield ``(eqn, within)`` for every equation, depth-first;
+    ``within`` is the stack of enclosing primitive names (empty at the
+    top level)."""
+    for eqn in jaxpr.eqns:
+        yield eqn, within
+        inner = within + (eqn.primitive.name,)
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, inner)
+
+
+def total_eqns(closed) -> int:
+    """Recursive equation count — the invariance metric. Stricter than
+    the historical ``len(closed.jaxpr.eqns)``: growth hidden inside a
+    pjit/scan body counts too."""
+    jaxpr = getattr(closed, "jaxpr", closed)
+    return sum(1 for _ in iter_eqns(jaxpr))
+
+
+# ---------------------------------------------------------------------------
+# Structural rule checks
+# ---------------------------------------------------------------------------
+
+
+def _dtype_name(dt) -> str:
+    """Canonical dtype name whether ``dt`` is a np.dtype, a jnp scalar
+    type, or a string."""
+    import numpy as np
+
+    try:
+        return str(np.dtype(dt))
+    except TypeError:
+        return str(dt)
+
+
+def _aval_str(v) -> str:
+    aval = getattr(v, "aval", None)
+    if aval is None or not hasattr(aval, "dtype"):
+        return "?"
+    return f"{aval.dtype}{list(aval.shape)}"
+
+
+def _scope_ok(rule: PrimRule, within: Tuple[str, ...]) -> bool:
+    if rule.within is None:
+        return True
+    if rule.within == "top":
+        return not within
+    return rule.within in within
+
+
+def check_jaxpr(closed, contract: TraceContract, where: str) -> List[Finding]:
+    """Run every structural rule of ``contract`` over one traced
+    program. Returns deduplicated, deterministic findings."""
+    jaxpr = getattr(closed, "jaxpr", closed)
+    found: List[Finding] = []
+
+    def emit(rule: str, message: str, severity: str = "P1") -> None:
+        found.append(Finding(severity=severity, engine="jaxpr", rule=rule,
+                             where=where, message=message))
+
+    callbacks = 0
+    for eqn, within in iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if prim in HOST_CALLBACK_PRIMS:
+            callbacks += 1
+        if contract.no_pad_on_dtypes and prim == "pad":
+            hits = [_aval_str(v) for v in eqn.invars
+                    if str(getattr(getattr(v, "aval", None), "dtype", ""))
+                    in contract.no_pad_on_dtypes]
+            for h in hits:
+                emit("pad-on-dtype",
+                     f"pad on {h} operand (depth {list(within)}) — "
+                     f"forbidden dtypes {list(contract.no_pad_on_dtypes)}")
+        if contract.accum_dtype and prim == "dot_general" and "pallas_call" in within:
+            pref = eqn.params.get("preferred_element_type")
+            got = _dtype_name(pref) if pref is not None else str(eqn.invars[0].aval.dtype)
+            if got != contract.accum_dtype:
+                emit("accum-dtype",
+                     f"dot_general inside pallas_call accumulates in "
+                     f"{got}, contract requires {contract.accum_dtype} "
+                     f"(operands {[_aval_str(v) for v in eqn.invars]})")
+        for rule in contract.forbid_prims:
+            if rule.prim is not None and prim != rule.prim:
+                continue
+            if not _scope_ok(rule, within):
+                continue
+            if rule.when is not None and not rule.when(eqn):
+                continue
+            emit(rule.rule,
+                 f"forbidden {prim} (depth {list(within)}, operands "
+                 f"{[_aval_str(v) for v in eqn.invars]})"
+                 + (f": {rule.reason}" if rule.reason else ""))
+        for dtype_name, shape in contract.forbid_dtype_shapes:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not hasattr(aval, "dtype"):
+                    continue
+                if str(aval.dtype) == dtype_name and tuple(aval.shape) == tuple(shape):
+                    emit("forbid-dtype-shape",
+                         f"{prim} produces {dtype_name}{list(shape)} "
+                         f"(depth {list(within)}) — forbidden by contract")
+    if contract.max_host_callbacks is not None and callbacks > contract.max_host_callbacks:
+        emit("max-host-callbacks",
+             f"{callbacks} host callback(s) in the traced program, "
+             f"contract allows {contract.max_host_callbacks} — host "
+             f"chatter inside the step breaks the one-fetch-per-step "
+             f"serving discipline")
+    n = total_eqns(jaxpr)
+    if contract.max_eqns is not None and n > contract.max_eqns:
+        emit("max-eqns", f"{n} equations > contract cap {contract.max_eqns}")
+    # dedupe (identical sub-jaxprs can repeat a message) keeping order
+    seen, unique = set(), []
+    for f in found:
+        if f not in seen:
+            seen.add(f)
+            unique.append(f)
+    return unique
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def audit(fn, args: tuple, contract: TraceContract, *, name: str = "<adhoc>") -> List[Finding]:
+    """Trace ``fn(*args)`` with ``jax.make_jaxpr`` and check
+    ``contract``'s structural rules. The direct, test-friendly entry
+    point; registered contracts add the invariance axes on top
+    (:func:`run_contract`)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return check_jaxpr(closed, contract, name)
+
+
+def audit_invariance(
+    build,
+    axes: Dict[str, Tuple[Any, ...]],
+    *,
+    contract: Optional[TraceContract] = None,
+    name: str = "<adhoc>",
+) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Re-trace ``build(**combo)`` over the cross product of ``axes``
+    and require a single recursive equation count; additionally run
+    ``contract``'s structural rules (when given) on every variant.
+
+    Returns ``(findings, meta)`` with ``meta["eqn_counts"]`` mapping
+    the axis combo (as a stable string) to its count and
+    ``meta["skipped"]`` listing combos a builder refused
+    (:class:`SkipTrace`)."""
+    contract = contract or TraceContract()
+    findings: List[Finding] = []
+    counts: Dict[str, int] = {}
+    skipped: List[str] = []
+    axis_names = sorted(axes)
+    combos = list(itertools.product(*(axes[a] for a in axis_names))) or [()]
+    for combo in combos:
+        kv = dict(zip(axis_names, combo))
+        label = ",".join(f"{k}={v}" for k, v in kv.items()) or "-"
+        try:
+            fn, args = build(**kv)
+        except SkipTrace as e:
+            skipped.append(f"{label}: {e}")
+            continue
+        closed = jax.make_jaxpr(fn)(*args)
+        counts[label] = total_eqns(closed)
+        findings.extend(check_jaxpr(closed, contract, name))
+    if len(set(counts.values())) > 1:
+        findings.append(Finding(
+            severity="P1", engine="jaxpr", rule="eqn-count-variant",
+            where=name,
+            message=(
+                "traced equation count varies with "
+                f"{axis_names}: { {k: counts[k] for k in sorted(counts)} } "
+                "— the program must stay one fixed batched trace "
+                "(per-slot/per-shard python work is leaking into the jaxpr)"
+            ),
+        ))
+    # dedupe across variants
+    seen, unique = set(), []
+    for f in findings:
+        if f not in seen:
+            seen.add(f)
+            unique.append(f)
+    meta = {"eqn_counts": {k: counts[k] for k in sorted(counts)},
+            "skipped": sorted(skipped)}
+    return unique, meta
+
+
+def run_contract(point_or_name) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Run one registered :class:`TracePoint` (by object or name):
+    structural rules on every axis combination plus equation-count
+    invariance. The unit the CLI iterates and the migrated tests call."""
+    point: TracePoint = (
+        point_or_name if isinstance(point_or_name, TracePoint)
+        else get_trace_contract(point_or_name)
+    )
+    return audit_invariance(point.build, dict(point.axes),
+                            contract=point.contract, name=point.name)

@@ -1,0 +1,321 @@
+"""Source AST linter: host-sync and tracing hazards in jit-reachable
+code (DESIGN.md §10).
+
+Rules (ids are stable — they key the baseline ratchet):
+
+  host-sync (P1)
+      ``np.asarray``/``np.array``/``jax.device_get`` calls,
+      ``.item()``/``.block_until_ready()`` method calls, and
+      ``int(...)``/``float(...)`` whose argument contains a
+      ``jnp.``/``jax.`` call — each of these blocks the host on device
+      work. Inside jit-reachable code they either fail on tracers or
+      (in host-side driver loops) silently serialize the pipeline. The
+      serving discipline allows exactly the documented fetches, which
+      carry a justification marker (below).
+
+  tracer-branch (P2)
+      ``if``/``while`` whose test calls a ``jnp.`` function — Python
+      control flow cannot branch on tracer values; shape/dtype
+      metadata (``.ndim``/``.shape``/``.size``/``.dtype``) is static
+      and exempt.
+
+  static-arg-hazard (P2)
+      ``jax.jit(..., static_argnums=/static_argnames=)`` naming a
+      parameter whose default or annotation is an unhashable container
+      (list/dict/set) — hashing fails at call time, or worse, silently
+      retraces forever with unhashable-wrapper types.
+
+  dataclass-unregistered (P3)
+      a non-frozen dataclass in jit-reachable code that the module
+      never registers as a pytree (``register_pytree_node[_class]`` /
+      ``register_dataclass``) — passed through jit it dies as a leaf
+      of unknown type; as a static arg it is unhashable.
+
+Suppression — *at the offending line* (same line or the line above),
+with a justification::
+
+    toks = np.asarray(toks)  # analysis: host-sync ok — the one documented fetch per decode step
+
+The marker is rule-scoped (``# analysis: <rule-id> ok``); a lint
+finding without a marker is a real finding, and an unused marker costs
+nothing. Scanned packages are the jit-reachable ones
+(:data:`TRACED_PACKAGES`); launch/, configs/, hw/, data/ and analysis/
+itself are host-side by design and excluded.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis.jaxpr_audit import Finding
+
+#: packages under src/repro whose code is reachable from a jit trace
+TRACED_PACKAGES = (
+    "core", "models", "kernels", "serve", "quant", "dist", "train", "optim",
+)
+
+_SUPPRESS_RE = re.compile(r"#\s*analysis:\s*([a-z0-9-]+)\s+ok\b")
+
+#: attribute-call names that block on device values
+_SYNC_METHODS = ("item", "block_until_ready")
+#: numpy-module functions that force a device->host copy
+_NP_SYNC_FUNCS = ("asarray", "array")
+#: metadata attributes that are static at trace time (never tracers)
+#: plus host-side jax runtime queries (device/topology introspection
+#: returns python values, not tracers)
+_STATIC_ATTRS = {
+    "ndim", "shape", "size", "dtype",
+    "device_count", "local_device_count", "devices", "local_devices",
+    "default_backend", "process_index", "process_count",
+}
+_MUTABLE_ANNOTATIONS = {"list", "dict", "set", "List", "Dict", "Set"}
+
+_SEVERITY = {
+    "host-sync": "P1",
+    "tracer-branch": "P2",
+    "static-arg-hazard": "P2",
+    "dataclass-unregistered": "P3",
+}
+
+
+def _dotted(node: ast.AST) -> str:
+    """'np.asarray' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _module_aliases(tree: ast.Module) -> Tuple[set, set]:
+    """(numpy aliases, jax-ish aliases) bound by this module's imports.
+    jax.numpy aliases count as jax-ish (device-side, NOT host-sync)."""
+    np_names, jax_names = set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                if a.name == "numpy":
+                    np_names.add(name)
+                elif a.name in ("jax", "jax.numpy") or a.name.startswith("jax."):
+                    jax_names.add(name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == "jax" or node.module.startswith("jax."):
+                for a in node.names:
+                    jax_names.add(a.asname or a.name)
+    return np_names, jax_names
+
+
+def _contains_jax_call(node: ast.AST, jax_names: set) -> bool:
+    """Does the subtree call a jax/jnp function (excluding static
+    metadata access)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            dotted = _dotted(sub.func)
+            root = dotted.split(".")[0] if dotted else ""
+            leaf = dotted.split(".")[-1] if dotted else ""
+            if root in jax_names and leaf not in _STATIC_ATTRS:
+                return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        self.np_names, self.jax_names = _module_aliases(self.tree)
+        self.findings: List[Finding] = []
+        # every module-level / nested function def by name, for
+        # static-arg resolution of jax.jit(fn, static_argnums=...)
+        self.defs = {
+            n.name: n for n in ast.walk(self.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        self.registered = self._pytree_registered_names()
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _suppressed(self, rule: str, lineno: int) -> bool:
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _SUPPRESS_RE.search(self.lines[ln - 1])
+                if m and m.group(1) in (rule, "all"):
+                    return True
+        return False
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        lineno = getattr(node, "lineno", 0)
+        # a decorated def/class anchors at the `class`/`def` keyword, but
+        # the natural place for the marker is above the decorators
+        first = min([lineno] + [d.lineno for d in
+                                getattr(node, "decorator_list", [])])
+        if self._suppressed(rule, lineno) or self._suppressed(rule, first):
+            return
+        self.findings.append(Finding(
+            severity=_SEVERITY[rule], engine="lint", rule=rule,
+            where=f"{self.path}:{lineno}", message=message,
+        ))
+
+    def _pytree_registered_names(self) -> set:
+        """Class names this module registers as pytrees (decorator or
+        call form)."""
+        names: set = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted.split(".")[-1] in (
+                    "register_pytree_node", "register_pytree_node_class",
+                    "register_dataclass", "register_static",
+                ):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            names.add(arg.id)
+            elif isinstance(node, ast.ClassDef):
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    if _dotted(target).split(".")[-1] in (
+                        "register_pytree_node_class", "register_dataclass",
+                    ):
+                        names.add(node.name)
+        return names
+
+    # -- host-sync ----------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        root = dotted.split(".")[0] if dotted else ""
+        leaf = dotted.split(".")[-1] if dotted else ""
+        if root in self.np_names and leaf in _NP_SYNC_FUNCS:
+            self._emit("host-sync", node,
+                       f"{dotted}(...) forces a device->host copy "
+                       f"(blocks on device work; fails on tracers)")
+        elif dotted == "jax.device_get" or leaf == "device_get" and root in self.jax_names:
+            self._emit("host-sync", node,
+                       f"{dotted}(...) is an explicit device->host fetch")
+        elif isinstance(node.func, ast.Attribute) and node.func.attr in _SYNC_METHODS \
+                and not node.args and not node.keywords:
+            self._emit("host-sync", node,
+                       f".{node.func.attr}() blocks the host on device work")
+        elif isinstance(node.func, ast.Name) and node.func.id in ("int", "float") \
+                and len(node.args) == 1 \
+                and _contains_jax_call(node.args[0], self.jax_names):
+            self._emit("host-sync", node,
+                       f"{node.func.id}(<jax expression>) synchronously "
+                       f"pulls a device scalar to the host")
+        self._check_static_args(node)
+        self.generic_visit(node)
+
+    # -- tracer branching ----------------------------------------------------
+
+    def _check_branch(self, node) -> None:
+        if _contains_jax_call(node.test, self.jax_names):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            self._emit("tracer-branch", node,
+                       f"python `{kind}` on a jax expression — tracers "
+                       f"cannot drive python control flow (use jnp.where/"
+                       f"lax.cond, or hoist to static metadata)")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node)
+        self.generic_visit(node)
+
+    # -- static-arg hazards --------------------------------------------------
+
+    def _check_static_args(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted.split(".")[-1] not in ("jit", "pjit"):
+            return
+        static_kw = {k.arg: k.value for k in node.keywords
+                     if k.arg in ("static_argnums", "static_argnames")}
+        if not static_kw:
+            return
+        target: Optional[ast.FunctionDef] = None
+        if node.args and isinstance(node.args[0], ast.Name):
+            target = self.defs.get(node.args[0].id)
+        if target is None:
+            return
+        params = target.args.args
+        flagged: List[str] = []
+        for kind, val in static_kw.items():
+            idxs: List[int] = []
+            items = val.elts if isinstance(val, (ast.Tuple, ast.List)) else [val]
+            for item in items:
+                if kind == "static_argnums" and isinstance(item, ast.Constant) \
+                        and isinstance(item.value, int) and item.value < len(params):
+                    idxs.append(item.value)
+                elif kind == "static_argnames" and isinstance(item, ast.Constant):
+                    for i, p in enumerate(params):
+                        if p.arg == item.value:
+                            idxs.append(i)
+            defaults = target.args.defaults
+            off = len(params) - len(defaults)
+            for i in idxs:
+                ann = params[i].annotation
+                ann_name = ""
+                if isinstance(ann, ast.Name):
+                    ann_name = ann.id
+                elif isinstance(ann, ast.Subscript) and isinstance(ann.value, ast.Name):
+                    ann_name = ann.value.id
+                default = defaults[i - off] if i >= off else None
+                if ann_name in _MUTABLE_ANNOTATIONS or isinstance(
+                        default, (ast.List, ast.Dict, ast.Set)):
+                    flagged.append(params[i].arg)
+        if flagged:
+            self._emit("static-arg-hazard", node,
+                       f"static arg(s) {flagged} of `{target.name}` are "
+                       f"unhashable containers — jit static args must "
+                       f"hash (use tuples / frozen dataclasses)")
+
+    # -- dataclass pytree registration --------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        is_dc, frozen = False, False
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _dotted(target).split(".")[-1] == "dataclass":
+                is_dc = True
+                if isinstance(dec, ast.Call):
+                    for k in dec.keywords:
+                        if k.arg == "frozen" and isinstance(k.value, ast.Constant) \
+                                and k.value.value is True:
+                            frozen = True
+        if is_dc and not frozen and node.name not in self.registered:
+            self._emit("dataclass-unregistered", node,
+                       f"non-frozen dataclass `{node.name}` is neither "
+                       f"frozen (hashable static arg) nor registered as "
+                       f"a pytree — it cannot cross a jit boundary")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """Lint one module's source. ``path`` is the repo-relative path
+    used in findings (tests pass synthetic paths)."""
+    linter = _Linter(path, source)
+    linter.visit(linter.tree)
+    return sorted(linter.findings)
+
+
+def lint_paths(root: Path, packages: Iterable[str] = TRACED_PACKAGES) -> List[Finding]:
+    """Lint every ``.py`` file of the traced packages under
+    ``root/src/repro`` (sorted walk — deterministic reports)."""
+    findings: List[Finding] = []
+    base = Path(root) / "src" / "repro"
+    files = [base / "api.py"]
+    for pkg in packages:
+        files.extend(sorted((base / pkg).rglob("*.py")))
+    for f in files:
+        if not f.exists():
+            continue
+        rel = str(f.relative_to(Path(root)))
+        findings.extend(lint_source(f.read_text(), rel))
+    return sorted(findings)

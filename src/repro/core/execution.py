@@ -358,10 +358,12 @@ def autotune(
         for tiles in cands:
             if not _tiles_valid(spec, tiles):
                 continue
+            # analysis: host-sync ok — autotune timing must block the host
             run(tiles).block_until_ready()  # compile outside the clock
             times = []
             for _ in range(max(1, repeats)):
                 t0 = time.perf_counter()
+                # analysis: host-sync ok — autotune timing must block the host
                 run(tiles).block_until_ready()
                 times.append(time.perf_counter() - t0)
             us = float(np.min(times) * 1e6)
@@ -991,3 +993,165 @@ def spec_cost_summary(
         "mac_pass_pj": cost.mac_pass_pj,
         "macro_area_vs_nm": cost.macro_area,
     }
+
+
+# ---------------------------------------------------------------------------
+# Tracing contracts (repro.analysis — DESIGN.md §10)
+#
+# The execution-shim invariants, declared where the shim lives. These
+# drive the jaxpr auditor, the migrated jaxpr-pin tests, and the
+# `python -m repro.analysis` CI ratchet from one table.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import (  # noqa: E402
+    PrimRule,
+    SkipTrace,
+    TraceContract,
+    forbid_convert,
+    register_trace_contract,
+)
+
+
+def _audit_planes(spec: CiMExecSpec, k: int = 512, n: int = 256):
+    """Deterministic canonical PackedPlanes for audit traces — the
+    prepare-time layout without initializing a model. K/N are chosen so
+    no plane dim collides with the 128-row M tile (the decode-M rule
+    below keys on a literal 128 leading dim)."""
+    kw = jax.random.PRNGKey(7)
+    w = jax.random.choice(kw, jnp.asarray([-1, 0, 1], jnp.int8), (k, n))
+    p1, p2 = tern.pack_ternary(w, axis=0)
+    k_mult, n_mult = canonical_plane_layout(spec)
+    p1 = _pad_axis(_pad_axis(p1, k_mult // 8, 0), n_mult, 1)
+    p2 = _pad_axis(_pad_axis(p2, k_mult // 8, 0), n_mult, 1)
+    return tern.PackedPlanes(
+        pos=p1, neg=p2, scale=jnp.ones((n,), jnp.float32), k=k, n=n
+    )
+
+
+def no_decode_m128_rule() -> PrimRule:
+    """No Pallas kernel on a decode-class trace may consume a 2-D
+    operand padded to the 128-row MXU tile — the decode fast path pads
+    M only to the 8-row decode tile (DESIGN.md §9)."""
+
+    def _m128(eqn) -> bool:
+        return any(
+            getattr(v.aval, "ndim", 0) == 2 and v.aval.shape[0] == 128
+            for v in eqn.invars
+        )
+
+    return PrimRule(
+        rule="decode-m-pad-128", prim="pallas_call", when=_m128,
+        reason="decode shapes pad M to the 8-row decode tile, never 128",
+    )
+
+
+def _packed_decode_point(backend: str):
+    """execute_packed over canonical stored planes at a decode shape
+    (M=3) — the serving weight path."""
+
+    def build():
+        spec = CiMExecSpec(formulation="blocked", backend=backend,
+                           packing="bitplane_u8")
+        planes = _audit_planes(spec)
+        kx = jax.random.PRNGKey(3)
+        x = jax.random.choice(
+            kx, jnp.asarray([-1, 0, 1], jnp.float32), (3, planes.k))
+
+        def f(xv, pos, neg):
+            lay = tern.PackedPlanes(pos=pos, neg=neg, scale=planes.scale,
+                                    k=planes.k, n=planes.n)
+            return execute_packed(spec, xv, lay)
+
+        return f, (x, planes.pos, planes.neg)
+
+    return build
+
+
+_PACKED_DECODE_RULES = dict(
+    max_host_callbacks=0,
+    no_pad_on_dtypes=("uint8",),
+)
+
+register_trace_contract(
+    "execution.execute_packed.decode.jnp",
+    _packed_decode_point("jnp"),
+    TraceContract(**_PACKED_DECODE_RULES),
+)
+
+register_trace_contract(
+    "execution.execute_packed.decode.pallas",
+    _packed_decode_point("pallas"),
+    TraceContract(
+        **_PACKED_DECODE_RULES,
+        accum_dtype="int32",
+        forbid_prims=(
+            no_decode_m128_rule(),
+            forbid_convert(
+                from_kinds=("int",), to=("float32", "float64", "bfloat16"),
+                within="pallas_call",
+                reason="decode-class event counts stay integer end-to-end",
+            ),
+        ),
+    ),
+)
+
+
+def _ste_backward_point(formulation: str = "exact"):
+    """grad of ``formulation`` on bf16 operands — §Perf A4: the exact
+    STE backward dots keep the operand dtype so TP all-reduce payloads
+    stay at activation width (no f32[4,32] dx anywhere in the trace).
+    The blocked formulation accumulates its STE backward in f32 by
+    design — the tests use it as the rule's positive control."""
+
+    def build():
+        spec = CiMExecSpec(formulation=formulation, backend="jnp")
+        x = jnp.ones((4, 32), jnp.bfloat16)
+        w = jnp.ones((32, 3), jnp.bfloat16)
+        f = jax.grad(
+            lambda a, b: execute(spec, a, b).astype(jnp.float32).sum(),
+            argnums=(0, 1),
+        )
+        return f, (x, w)
+
+    return build
+
+
+register_trace_contract(
+    "execution.ste_backward.exact",
+    _ste_backward_point(),
+    TraceContract(forbid_dtype_shapes=(("float32", (4, 32)),)),
+)
+
+
+def _execute_tp_point():
+    """The explicit shard_map TP route with the compressed int8
+    collective: one primitive per all-reduce regardless of mesh size —
+    the traced program must not grow with tp."""
+
+    def build(tp: int = 2):
+        if jax.device_count() < tp:
+            raise SkipTrace(
+                f"needs {tp} devices, have {jax.device_count()} "
+                f"(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+            )
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(tp)
+        spec = CiMExecSpec(formulation="blocked", backend="jnp")
+        x = jnp.ones((4, 64), jnp.float32)
+        w = jnp.ones((64, 32), jnp.float32)
+
+        def f(a, b):
+            return execute_tp(spec, a, b, mesh, compressed=True)
+
+        return f, (x, w)
+
+    return build
+
+
+register_trace_contract(
+    "execution.execute_tp.compressed",
+    _execute_tp_point(),
+    TraceContract(max_host_callbacks=0),
+    axes={"tp": (2, 4)},
+)

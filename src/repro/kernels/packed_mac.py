@@ -222,3 +222,69 @@ def packed_cim_matmul_decode(
         ),
         interpret=interpret,
     )(x, w_pos, w_neg)
+
+
+# ---------------------------------------------------------------------------
+# Tracing contracts (repro.analysis — DESIGN.md §10)
+#
+# The kernel-level invariants, declared next to the kernels they pin:
+#
+#   * the decode kernel's a/b event counts accumulate in int32 — an f32
+#     accumulator would still be numerically exact (counts are bounded
+#     by `block`) but silently abandons the integer ADC pipeline the
+#     TiM-DNN macro contract costs against, and converts would creep
+#     into the int8 decode datapath;
+#   * the prefill kernel deliberately accumulates in f32 (bf16 MXU
+#     operands) — pinned too, so a change to either side is a conscious
+#     contract edit, not drift.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import (  # noqa: E402
+    TraceContract,
+    forbid_convert,
+    register_trace_contract,
+)
+
+
+def _decode_kernel_point():
+    x = jnp.ones((8, 256), jnp.int8)
+    planes = jnp.zeros((32, 128), jnp.uint8)
+
+    def f(xv, wp, wn):
+        return packed_cim_matmul_decode(xv, wp, wn, interpret=True)
+
+    return f, (x, planes, planes)
+
+
+def _prefill_kernel_point():
+    x = jnp.ones((128, 256), jnp.bfloat16)
+    planes = jnp.zeros((32, 128), jnp.uint8)
+
+    def f(xv, wp, wn):
+        return packed_cim_matmul(xv, wp, wn, interpret=True)
+
+    return f, (x, planes, planes)
+
+
+register_trace_contract(
+    "kernels.packed_decode_kernel",
+    _decode_kernel_point,
+    TraceContract(
+        max_host_callbacks=0,
+        accum_dtype="int32",
+        forbid_prims=(
+            forbid_convert(
+                from_kinds=("int",), to=("float32", "float64", "bfloat16"),
+                within="pallas_call",
+                reason="the decode kernel's int8/int32 event-count "
+                       "datapath must not promote to float",
+            ),
+        ),
+    ),
+)
+
+register_trace_contract(
+    "kernels.packed_prefill_kernel",
+    _prefill_kernel_point,
+    TraceContract(max_host_callbacks=0, accum_dtype="float32"),
+)

@@ -106,6 +106,23 @@ def make_jit_serve_step(cfg: ArchConfig, donate_caches: bool = True):
     return jax.jit(f, donate_argnums=(2,) if donate_caches else ())
 
 
+def fused_decode_fn(cfg: ArchConfig, temperature: float = 0.0):
+    """The function the fused batcher jits for every decode step: one
+    ragged-position ``decode_step`` over all slots plus on-device
+    sampling — tokens out are the step's ONLY device->host payload.
+    Module-level (not a closure inside the batcher) so the registered
+    ``serve.fused_decode_step`` tracing contract audits the *same*
+    function production serves with, not a test replica."""
+
+    def step(params, tokens, caches, positions, start, key):
+        logits, caches = T.decode_step(
+            params, tokens, caches, positions, cfg, start=start)
+        toks = sample(logits[:, -1:, :], key, temperature)[:, 0]
+        return toks, caches
+
+    return step
+
+
 def generate(
     params,
     prompt: jax.Array,
@@ -139,6 +156,7 @@ def generate(
 # Continuous batching
 # ---------------------------------------------------------------------------
 
+# analysis: dataclass-unregistered ok — host-side bookkeeping, never jitted
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -377,15 +395,7 @@ class ContinuousBatcher:
         return scoped
 
     def _build_decode_fused(self):
-        cfg = self.cfg
-
-        def step(params, tokens, caches, positions, start, key):
-            logits, caches = T.decode_step(
-                params, tokens, caches, positions, cfg, start=start)
-            toks = self._sample_on_device(logits[:, -1, :], key)
-            return toks, caches
-
-        return self._jit_step(step, (2,))
+        return self._jit_step(fused_decode_fn(self.cfg, self.temperature), (2,))
 
     def _build_prefill_fused(self):
         cfg, n, s_max = self.cfg, self.n_slots, self.s_max
@@ -438,7 +448,8 @@ class ContinuousBatcher:
         toks, self.caches = self._prefill(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(start),
             jnp.asarray(fill), key)
-        toks = np.asarray(toks)  # one host fetch for the whole fill batch
+        # analysis: host-sync ok — the one documented fetch per fill batch
+        toks = np.asarray(toks)
         self.host_syncs += 1
         for s in newly:
             req = self.slot_req[s]
@@ -459,7 +470,8 @@ class ContinuousBatcher:
             self.params, tokens, self.caches, positions, start, key)
         self.decode_steps += 1
         self._step_idx += 1
-        toks = np.asarray(toks)  # the single host fetch of this step
+        # analysis: host-sync ok — the single documented fetch of this step
+        toks = np.asarray(toks)
         self.host_syncs += 1
         for s in active:
             req = self.slot_req[s]
@@ -524,7 +536,8 @@ class ContinuousBatcher:
                         leaf = jax.lax.dynamic_update_slice_in_dim(leaf, rl, s, axis=1)
                     new_flat.append(leaf)
                 self.caches = jax.tree_util.tree_unflatten(treedef, new_flat)
-                tok = int(jnp.argmax(logits[0, -1]))  # per-slot host sync
+                # analysis: host-sync ok — looped baseline syncs per slot by design
+                tok = int(jnp.argmax(logits[0, -1]))
                 self.host_syncs += 1
                 req.generated.append(tok)
                 self._last_tok[s] = tok
@@ -591,3 +604,90 @@ class ContinuousBatcher:
     def run(self) -> None:
         while self.queue or any(r is not None for r in self.slot_req):
             self.step()
+
+
+# ---------------------------------------------------------------------------
+# Tracing contracts (repro.analysis — DESIGN.md §10)
+#
+# The serving invariants the paper's throughput claims rest on, declared
+# next to the engine that must uphold them:
+#
+#   * the fused decode step is ONE batched traced program: its equation
+#     count is invariant to the slot count and the TP mesh size (the
+#     per-slot python work of the looped baseline must never leak back
+#     into the trace);
+#   * no host callbacks inside the step — the single documented host
+#     fetch (`np.asarray(toks)`) happens outside the jit boundary;
+#   * no pad on uint8 operands — stored 2-bit planes enter kernels in
+#     their prepare-time canonical layout.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import (  # noqa: E402
+    SkipTrace,
+    TraceContract,
+    register_trace_contract,
+)
+
+
+def _fused_step_point(quant_mode: str):
+    """Build (fn, args) tracing the production fused decode step on the
+    smoke serving arch under ``quant_mode``. TP variants trace under an
+    installed ("data", "model") mesh, exactly like the engine's
+    ``compress_tp`` scoping."""
+
+    def build(n_slots: int = 3, tp: int = 1):
+        if jax.device_count() < tp:
+            raise SkipTrace(
+                f"needs {tp} devices, have {jax.device_count()} "
+                f"(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+            )
+        from repro.models.layers import QuantConfig
+        from repro.models.registry import get_config
+
+        cfg = get_config("smollm-135m", smoke=True).replace(
+            quant=QuantConfig(mode=quant_mode))
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        caches = T.init_caches(cfg, n_slots, 32)
+        step = fused_decode_fn(cfg)
+        args = (params, jnp.zeros((n_slots, 1), jnp.int32), caches,
+                jnp.zeros((n_slots,), jnp.int32),
+                jnp.zeros((n_slots,), jnp.int32), jax.random.PRNGKey(1))
+        if tp == 1:
+            return step, args
+
+        from repro.dist import sharding as shd
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(tp)
+
+        def step_under_mesh(*a):
+            prev = shd.tp_mesh()
+            shd.set_tp_mesh(mesh)
+            try:
+                return step(*a)
+            finally:
+                shd.set_tp_mesh(prev)
+
+        return step_under_mesh, args
+
+    return build
+
+
+_FUSED_STEP_CONTRACT = TraceContract(
+    max_host_callbacks=0,
+    no_pad_on_dtypes=("uint8",),
+)
+
+register_trace_contract(
+    "serve.fused_decode_step",
+    _fused_step_point("off"),
+    _FUSED_STEP_CONTRACT,
+    axes={"n_slots": (2, 6), "tp": (1, 2, 4)},
+)
+
+register_trace_contract(
+    "serve.fused_decode_step.cim",
+    _fused_step_point("cim"),
+    _FUSED_STEP_CONTRACT,
+    axes={"n_slots": (2, 6)},
+)

@@ -61,7 +61,8 @@ def save(
 ) -> Optional[Future]:
     """Checkpoint ``tree`` at ``step``. Returns a Future in async mode."""
     leaves, treedef = _leaves_with_treedef(tree)
-    host_leaves = [np.asarray(x) for x in leaves]  # d2h (blocking part)
+    # analysis: host-sync ok — checkpoint d2h copy is the whole point
+    host_leaves = [np.asarray(x) for x in leaves]
     # npz cannot represent ml_dtypes (bf16 etc.) — store a raw byte view
     # and reconstruct from the manifest dtype on restore.
     stored = [

@@ -1,0 +1,428 @@
+"""repro.analysis: per-rule positive/negative fixtures for both
+engines, the four acceptance injections (each reverted), and the
+baseline ratchet's byte-reproducibility.
+
+The injection tests are the teeth of the suite: each deliberately
+introduces one regression class the auditor exists to catch — an extra
+host fetch inside the fused decode step, a per-step pad on the uint8
+planes, an f32 accumulator where the decode contract demands int32,
+and jaxpr growth with the slot count — asserts the finding fires, then
+reverts the injection and asserts the contract is green again.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Finding,
+    PrimRule,
+    SkipTrace,
+    TraceContract,
+    audit,
+    audit_invariance,
+    forbid_convert,
+    get_trace_contract,
+    lint_source,
+    run_contract,
+    total_eqns,
+)
+from repro.analysis.report import (
+    BASELINE_NAME,
+    baseline_payload,
+    build_report,
+    canonical_json,
+    diff_against_baseline,
+    main as report_main,
+    repo_root,
+)
+
+
+def rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr engine: one positive + one negative per rule
+# ---------------------------------------------------------------------------
+
+
+class TestJaxprRules:
+    def test_pad_on_dtype(self):
+        contract = TraceContract(no_pad_on_dtypes=("uint8",))
+        x = jnp.zeros((4, 4), jnp.uint8)
+
+        bad = audit(lambda a: jnp.pad(a, ((0, 4), (0, 0))), (x,), contract)
+        assert rules(bad) == ["pad-on-dtype"]
+        # padding a float is outside the forbidden dtype set
+        ok = audit(lambda a: jnp.pad(a, ((0, 4), (0, 0))),
+                   (x.astype(jnp.float32),), contract)
+        assert not ok
+
+    def test_max_host_callbacks(self):
+        x = jnp.ones((3,), jnp.float32)
+        sd = jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+        def two_fetches(a):
+            a = jax.pure_callback(lambda v: np.asarray(v), sd, a)
+            return jax.pure_callback(lambda v: np.asarray(v), sd, a)
+
+        bad = audit(two_fetches, (x,), TraceContract(max_host_callbacks=1))
+        assert rules(bad) == ["max-host-callbacks"]
+        assert not audit(two_fetches, (x,), TraceContract(max_host_callbacks=2))
+        assert not audit(lambda a: a + 1, (x,),
+                         TraceContract(max_host_callbacks=0))
+
+    def test_forbid_convert_scoped_to_pallas(self):
+        contract = TraceContract(forbid_prims=(forbid_convert(),))
+        x = jnp.ones((4,), jnp.int32)
+
+        # scope is "pallas_call": a top-level int->f32 convert is allowed
+        assert not audit(lambda a: a.astype(jnp.float32), (x,), contract)
+        # unscoped variant fires anywhere
+        anywhere = TraceContract(forbid_prims=(forbid_convert(within=None),))
+        bad = audit(lambda a: a.astype(jnp.float32), (x,), anywhere)
+        assert rules(bad) == ["no-f32-event-promotion"]
+        # f32 -> bf16 is not an integer promotion
+        assert not audit(lambda a: a.astype(jnp.bfloat16),
+                         (x.astype(jnp.float32),), anywhere)
+
+    def test_prim_rule_predicate_and_top_scope(self):
+        x = jnp.ones((4,), jnp.float32)
+        top_only = TraceContract(forbid_prims=(
+            PrimRule(rule="no-top-sin", prim="sin", within="top"),))
+        bad = audit(jnp.sin, (x,), top_only)
+        assert rules(bad) == ["no-top-sin"]
+        # the same sin nested under jit is outside "top"
+        assert not audit(jax.jit(jnp.sin), (x,), top_only)
+
+    def test_forbid_dtype_shapes(self):
+        contract = TraceContract(
+            forbid_dtype_shapes=(("float32", (4, 32)),))
+        x = jnp.ones((4, 32), jnp.bfloat16)
+
+        bad = audit(lambda a: a.astype(jnp.float32), (x,), contract)
+        assert rules(bad) == ["forbid-dtype-shape"]
+        assert not audit(lambda a: a + 1, (x,), contract)
+
+    def test_max_eqns(self):
+        x = jnp.ones((4,), jnp.float32)
+        bad = audit(lambda a: jnp.sin(jnp.cos(a)) + 1, (x,),
+                    TraceContract(max_eqns=1))
+        assert rules(bad) == ["max-eqns"]
+        assert not audit(jnp.sin, (x,), TraceContract(max_eqns=1))
+
+    def test_total_eqns_recurses_into_pjit(self):
+        x = jnp.ones((4,), jnp.float32)
+        closed = jax.make_jaxpr(jax.jit(lambda a: jnp.sin(a) + 1))(x)
+        # top level is a single pjit equation; the real work is inside
+        assert len(closed.jaxpr.eqns) == 1
+        assert total_eqns(closed) >= 3
+
+
+class TestInvariance:
+    def test_eqn_count_variant_detected(self):
+        def build(n):
+            x = jnp.ones((n, 8), jnp.float32)
+
+            def per_row(a):  # per-slot python work leaks into the jaxpr
+                return sum(jnp.sin(a[i]).sum() for i in range(n))
+
+            return per_row, (x,)
+
+        findings, meta = audit_invariance(build, {"n": (2, 4)})
+        assert rules(findings) == ["eqn-count-variant"]
+        assert len(set(meta["eqn_counts"].values())) == 2
+
+    def test_batched_program_is_invariant(self):
+        def build(n):
+            x = jnp.ones((n, 8), jnp.float32)
+            return (lambda a: jnp.sin(a).sum()), (x,)
+
+        findings, meta = audit_invariance(build, {"n": (2, 4)})
+        assert not findings
+        assert len(set(meta["eqn_counts"].values())) == 1
+
+    def test_skip_trace_is_metadata_not_finding(self):
+        def build(n):
+            if n > 2:
+                raise SkipTrace("needs more devices")
+            x = jnp.ones((n,), jnp.float32)
+            return jnp.sin, (x,)
+
+        findings, meta = audit_invariance(build, {"n": (2, 4)})
+        assert not findings
+        assert len(meta["skipped"]) == 1 and "devices" in meta["skipped"][0]
+
+
+# ---------------------------------------------------------------------------
+# Lint engine: synthetic sources, one positive + one negative per rule
+# ---------------------------------------------------------------------------
+
+_PRELUDE = "import jax\nimport jax.numpy as jnp\nimport numpy as np\n"
+
+
+def lint(body):
+    return lint_source(_PRELUDE + body, "synthetic.py")
+
+
+class TestLintHostSync:
+    def test_np_asarray_flagged_jnp_asarray_not(self):
+        assert rules(lint("def f(x):\n    return np.asarray(x)\n")) \
+            == ["host-sync"]
+        assert not lint("def f(x):\n    return jnp.asarray(x)\n")
+
+    def test_item_block_until_ready_device_get(self):
+        assert rules(lint("def f(x):\n    return x.item()\n")) == ["host-sync"]
+        assert rules(lint("def f(x):\n    x.block_until_ready()\n")) \
+            == ["host-sync"]
+        assert rules(lint("def f(x):\n    return jax.device_get(x)\n")) \
+            == ["host-sync"]
+
+    def test_int_of_jax_expression(self):
+        assert rules(lint("def f(x):\n    return int(jnp.argmax(x))\n")) \
+            == ["host-sync"]
+        # int() of host-side python stays host-side
+        assert not lint("def f(n):\n    return int(n) + 1\n")
+        # device_count is a host query, not a tracer
+        assert not lint("def f():\n    return int(jax.device_count())\n")
+
+    def test_suppression_same_line_and_line_above(self):
+        assert not lint(
+            "def f(x):\n"
+            "    return np.asarray(x)  # analysis: host-sync ok — documented\n")
+        assert not lint(
+            "def f(x):\n"
+            "    # analysis: host-sync ok — documented fetch\n"
+            "    return np.asarray(x)\n")
+        # a marker for a different rule does not suppress
+        assert rules(lint(
+            "def f(x):\n"
+            "    return np.asarray(x)  # analysis: tracer-branch ok\n")) \
+            == ["host-sync"]
+
+
+class TestLintTracerBranch:
+    def test_branch_on_jnp_flagged(self):
+        assert rules(lint("def f(x):\n    if jnp.any(x):\n        return x\n"
+                          "    return -x\n")) == ["tracer-branch"]
+        assert rules(lint("def f(x):\n    while jnp.all(x):\n        x = -x\n"
+                          "    return x\n")) == ["tracer-branch"]
+
+    def test_static_metadata_and_host_queries_exempt(self):
+        assert not lint("def f(x):\n    if x.ndim == 2:\n        return x\n"
+                        "    return x[None]\n")
+        assert not lint("def f(tp):\n    if jax.device_count() < tp:\n"
+                        "        return None\n    return tp\n")
+
+
+class TestLintStaticArgs:
+    def test_unhashable_static_default_flagged(self):
+        src = ("def f(x, tiles=[8, 128]):\n    return x\n"
+               "g = jax.jit(f, static_argnums=(1,))\n")
+        assert rules(lint(src)) == ["static-arg-hazard"]
+
+    def test_hashable_static_ok(self):
+        src = ("def f(x, tiles=(8, 128)):\n    return x\n"
+               "g = jax.jit(f, static_argnums=(1,))\n")
+        assert not lint(src)
+
+
+class TestLintDataclass:
+    def test_unregistered_nonfrozen_flagged(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class Foo:\n    a: int = 0\n")
+        assert rules(lint(src)) == ["dataclass-unregistered"]
+
+    def test_frozen_and_registered_ok(self):
+        assert not lint("import dataclasses\n"
+                        "@dataclasses.dataclass(frozen=True)\n"
+                        "class Foo:\n    a: int = 0\n")
+        assert not lint("import dataclasses\n"
+                        "@dataclasses.dataclass\n"
+                        "class Foo:\n    a: int = 0\n"
+                        "jax.tree_util.register_dataclass(Foo)\n")
+
+    def test_marker_above_decorator_suppresses(self):
+        assert not lint(
+            "import dataclasses\n"
+            "# analysis: dataclass-unregistered ok — host-side bookkeeping\n"
+            "@dataclasses.dataclass\n"
+            "class Foo:\n    a: int = 0\n")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance injections — each introduces one forbidden regression,
+# asserts the auditor catches it, reverts, and asserts green again.
+# ---------------------------------------------------------------------------
+
+
+class TestInjections:
+    def test_extra_host_fetch_in_decode_step_caught(self, monkeypatch):
+        """Injection 1: an extra device->host fetch inside the fused
+        decode step (a pure_callback smuggled into decode_step) must
+        trip max-host-callbacks=0; after reverting, the contract is
+        green again."""
+        import repro.models.transformer as T
+
+        point = get_trace_contract("serve.fused_decode_step")
+        orig = T.decode_step
+
+        def leaky_decode_step(params, tokens, caches, positions, cfg, **kw):
+            tokens = jax.pure_callback(
+                lambda t: np.asarray(t),
+                jax.ShapeDtypeStruct(tokens.shape, tokens.dtype), tokens)
+            return orig(params, tokens, caches, positions, cfg, **kw)
+
+        monkeypatch.setattr(T, "decode_step", leaky_decode_step)
+        fn, args = point.build(n_slots=2, tp=1)
+        bad = audit(fn, args, point.contract, name=point.name)
+        assert "max-host-callbacks" in rules(bad), bad
+
+        monkeypatch.undo()  # revert the injection
+        fn, args = point.build(n_slots=2, tp=1)
+        assert not audit(fn, args, point.contract, name=point.name)
+
+    def test_pad_on_uint8_plane_caught(self):
+        """Injection 2: de-canonicalized stored planes (pack only, no
+        prepare-time pad to the canonical layout) force a per-step pad
+        on the uint8 operands — exactly what the serving contract
+        forbids. Canonical planes (the registered point) stay green."""
+        from repro.core import ternary as tern
+        from repro.core.execution import CiMExecSpec, execute_packed
+
+        spec = CiMExecSpec(formulation="blocked", backend="pallas",
+                           packing="bitplane_u8")
+        k, n = 504, 250  # packable (8 | k) but not canonical multiples
+        w = jax.random.choice(jax.random.PRNGKey(7),
+                              jnp.asarray([-1, 0, 1], jnp.int8), (k, n))
+        pos, neg = tern.pack_ternary(w, axis=0)
+        x = jnp.ones((3, k), jnp.float32)
+
+        def f(xv, p, q):
+            lay = tern.PackedPlanes(pos=p, neg=q,
+                                    scale=jnp.ones((n,), jnp.float32),
+                                    k=k, n=n)
+            return execute_packed(spec, xv, lay)
+
+        contract = TraceContract(no_pad_on_dtypes=("uint8",))
+        bad = audit(f, (x, pos, neg), contract)
+        assert "pad-on-dtype" in rules(bad), bad
+
+        # the revert: canonical planes via the registered point
+        findings, _ = run_contract("execution.execute_packed.decode.pallas")
+        assert not findings, findings
+
+    def test_f32_accumulator_caught(self):
+        """Injection 3: an f32 dot accumulator where the decode
+        contract demands int32 — the prefill kernel (f32 accumulation
+        by design) traced under the decode contract is the minimal
+        reproduction, and the real decode kernel stays green under the
+        same rule."""
+        decode_rules = TraceContract(accum_dtype="int32")
+        fn, args = get_trace_contract("kernels.packed_prefill_kernel").build()
+        bad = audit(fn, args, decode_rules)
+        assert "accum-dtype" in rules(bad), bad
+
+        findings, _ = run_contract("kernels.packed_decode_kernel")
+        assert not findings, findings
+
+    def test_jaxpr_growth_with_n_slots_caught(self):
+        """Injection 4: per-slot python work wrapped around the real
+        fused step makes the equation count grow with n_slots — the
+        invariance auditor must flag it; the unwrapped step is
+        invariant (pinned by the registered contract, re-checked here
+        on the same two combos)."""
+        point = get_trace_contract("serve.fused_decode_step")
+
+        def leaky_build(n_slots):
+            fn, args = point.build(n_slots=n_slots, tp=1)
+
+            def per_slot(*a):
+                toks, caches = fn(*a)
+                acc = jnp.float32(0)
+                for s in range(n_slots):  # python loop over slots
+                    acc = acc + jnp.sin(toks[s].astype(jnp.float32))
+                return toks, caches, acc
+
+            return per_slot, args
+
+        findings, meta = audit_invariance(leaky_build, {"n_slots": (2, 4)})
+        assert rules(findings) == ["eqn-count-variant"], findings
+
+        def clean_build(n_slots):
+            return point.build(n_slots=n_slots, tp=1)
+
+        findings, meta = audit_invariance(clean_build, {"n_slots": (2, 4)},
+                                          contract=point.contract)
+        assert not findings, findings
+        assert len(set(meta["eqn_counts"].values())) == 1
+
+
+# ---------------------------------------------------------------------------
+# Baseline ratchet
+# ---------------------------------------------------------------------------
+
+
+class TestBaselineRatchet:
+    def test_lint_report_is_byte_reproducible(self):
+        root = repo_root()
+        a = build_report(root, audit=False)
+        b = build_report(root, audit=False)
+        assert canonical_json(a) == canonical_json(b)
+
+    def test_committed_baseline_matches_tree(self):
+        """The full report (both engines, all contracts) serializes to
+        exactly the committed ANALYSIS_baseline.json — the CI gate's
+        green state, pinned byte-for-byte."""
+        root = repo_root()
+        report = build_report(root)
+        committed = (root / BASELINE_NAME).read_text()
+        assert canonical_json(baseline_payload(report)) == committed
+
+    def test_diff_directions(self):
+        f1 = Finding("P1", "lint", "host-sync", "a.py:1", "m1").to_dict()
+        f2 = Finding("P1", "lint", "host-sync", "b.py:2", "m2").to_dict()
+        report = {"version": 1, "findings": [f1, f2]}
+        new, fixed = diff_against_baseline(report,
+                                           {"version": 1, "findings": [f1]})
+        assert new == [f2] and fixed == []
+        new, fixed = diff_against_baseline({"version": 1, "findings": [f1]},
+                                           report)
+        assert new == [] and fixed == [f2]
+
+    def test_cli_check_ratchets_both_ways(self, tmp_path):
+        """--check fails on a new finding (regression) AND on a stale
+        baseline entry (must ratchet down); lint-only keeps the test
+        fast — the full-audit path is covered above."""
+        base = tmp_path / "base.json"
+        assert report_main(["--no-audit", "--write-baseline",
+                            "--baseline", str(base)]) == 0
+        assert report_main(["--no-audit", "--check",
+                            "--baseline", str(base)]) == 0
+
+        payload = json.loads(base.read_text())
+        stale = dict(payload["findings"][0]) if payload["findings"] else {
+            "engine": "lint", "rule": "host-sync", "where": "x.py:1",
+            "severity": "P1", "message": "m"}
+        stale = {**stale, "where": "no/longer/there.py:1"}
+        base.write_text(json.dumps(
+            {"version": 1, "findings": payload["findings"] + [stale]}))
+        assert report_main(["--no-audit", "--check",
+                            "--baseline", str(base)]) == 1  # stale entry
+
+        base.write_text(json.dumps({"version": 1, "findings": []}))
+        rc = report_main(["--no-audit", "--check", "--baseline", str(base)])
+        # current tree has lint findings (the ratcheted TrainConfig) —
+        # against an empty baseline they are "new" and must fail
+        assert rc == 1
+
+    def test_cli_json_artifact(self, tmp_path):
+        out = tmp_path / "report.json"
+        assert report_main(["--no-audit", "--json", str(out)]) == 0
+        payload = json.loads(out.read_text())
+        assert payload["version"] == 1
+        assert set(payload) == {"version", "findings", "summary", "contracts"}

@@ -225,15 +225,11 @@ class TestCanonicalPlanes:
 
 
 def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
+    # migrated to the shared recursive walker (repro.analysis)
+    from repro.analysis import iter_eqns
+
+    for eqn, _within in iter_eqns(jaxpr):
         yield eqn
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else (v,)
-            for u in vs:
-                if hasattr(u, "eqns"):
-                    yield from _iter_eqns(u)
-                elif hasattr(u, "jaxpr"):
-                    yield from _iter_eqns(u.jaxpr)
 
 
 def _trace_packed(spec, planes, m):
@@ -253,24 +249,27 @@ class TestServingJaxpr:
         """The acceptance pin for prepare-time canonicalization: with
         canonical planes the traced step contains **no** pad on any
         uint8 (plane) operand — the pad moved to prepare time."""
+        from repro.analysis import TraceContract, check_jaxpr
+
         spec, packed = _smoke_planes(backend)
         lay = packed["blocks/attn/wq"].layer(0)
         closed = _trace_packed(spec, lay, m=3)
-        u8_pads = [
-            e for e in _iter_eqns(closed.jaxpr)
-            if e.primitive.name == "pad"
-            and any(getattr(v.aval, "dtype", None) == jnp.uint8
-                    for v in e.invars)
-        ]
-        assert not u8_pads, u8_pads
+        findings = check_jaxpr(
+            closed, TraceContract(no_pad_on_dtypes=("uint8",)),
+            f"decode_fastpath.{backend}")
+        assert not findings, findings
 
     def test_decode_shape_pads_m_to_decode_tile_not_128(self):
         """The acceptance pin for shape-aware dispatch: on a decode
         shape (M=3) the pallas packed kernel consumes x padded to the
         8-row decode tile; under the forced pre-§9 prefill class the
         same trace pads M to 128 (sensitivity check)."""
+        from repro.analysis import TraceContract, check_jaxpr
+        from repro.core.execution import no_decode_m128_rule
+
         spec, packed = _smoke_planes("pallas")
         lay = packed["blocks/attn/wq"].layer(0)
+        contract = TraceContract(forbid_prims=(no_decode_m128_rule(),))
 
         def m_dims(closed):
             dims = set()
@@ -280,16 +279,23 @@ class TestServingJaxpr:
                              if getattr(v.aval, "ndim", 0) == 2}
             return dims
 
-        decode_dims = m_dims(_trace_packed(spec, lay, m=3))
+        decode = _trace_packed(spec, lay, m=3)
+        assert not check_jaxpr(contract=contract, closed=decode,
+                               where="decode_fastpath.m3"), "m=3 padded to 128"
+        decode_dims = m_dims(decode)
         assert decode_dims, "no pallas_call traced"
-        assert 128 not in decode_dims and DECODE_M_MAX in decode_dims, \
-            decode_dims
+        assert DECODE_M_MAX in decode_dims, decode_dims
+        # sensitivity check: under the forced pre-§9 prefill class the
+        # very same rule must fire (the auditor is not vacuously green)
         set_shape_class_override("prefill")
         try:
-            prefill_dims = m_dims(_trace_packed(spec, lay, m=3))
+            prefill = _trace_packed(spec, lay, m=3)
         finally:
             set_shape_class_override(None)
-        assert 128 in prefill_dims, prefill_dims
+        hits = check_jaxpr(contract=contract, closed=prefill,
+                           where="decode_fastpath.m3.prefill_override")
+        assert any(f.rule == "decode-m-pad-128" for f in hits), hits
+        assert 128 in m_dims(prefill)
 
 
 # ---------------------------------------------------------------------------

@@ -318,20 +318,21 @@ class TestQuantConfigSpec:
 
     def test_ste_backward_keeps_operand_dtype_for_exact(self):
         """§Perf A4: exact/fused backward dots stay at activation width
-        so TP all-reduce payloads don't double; clamped backward is f32."""
-        x = jnp.ones((4, 32), jnp.bfloat16)
-        w = jnp.ones((32, 3), jnp.bfloat16)
+        so TP all-reduce payloads don't double; clamped backward is f32.
+        Migrated to the registered tracing contract, with the blocked
+        formulation kept as the positive control (the same rule must
+        fire there, so the green exact result is not vacuous)."""
+        from repro.analysis import TraceContract, audit, run_contract
+        from repro.core.execution import _ste_backward_point
 
-        def dots_in_bwd(formulation):
-            spec = api.CiMExecSpec(formulation=formulation, backend="jnp")
-            jaxpr = jax.make_jaxpr(
-                jax.grad(lambda a, b: api.execute(spec, a, b).astype(jnp.float32).sum(),
-                         argnums=(0, 1))
-            )(x, w)
-            return str(jaxpr)
+        findings, _meta = run_contract("execution.ste_backward.exact")
+        assert not findings, findings
 
-        assert "f32[4,32]" not in dots_in_bwd("exact")      # dx stays bf16
-        assert "f32[4,32]" in dots_in_bwd("blocked")        # STE accum f32
+        fn, args = _ste_backward_point(formulation="blocked")()
+        hits = audit(fn, args,
+                     TraceContract(forbid_dtype_shapes=(("float32", (4, 32)),)),
+                     name="execution.ste_backward.blocked")
+        assert any(f.rule == "forbid-dtype-shape" for f in hits), hits
 
     def test_mode_ladder_resolves_to_specs(self):
         from repro.models.layers import QuantConfig

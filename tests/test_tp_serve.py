@@ -269,48 +269,55 @@ class TestShardedExecute:
 
 
 class TestTPInvariants:
-    def _eqns(self, cfg, n_slots, quant_cfg=None):
-        params = T.init_params(jax.random.PRNGKey(0), cfg)
-        caches = T.init_caches(cfg, n_slots, 32)
-        closed = jax.make_jaxpr(
-            lambda p, t, c, i, s: T.decode_step(p, t, c, i, cfg, start=s)
-        )(params, jnp.zeros((n_slots, 1), jnp.int32), caches,
-          jnp.zeros((n_slots,), jnp.int32), jnp.zeros((n_slots,), jnp.int32))
-        return len(closed.jaxpr.eqns)
-
     def test_jaxpr_size_independent_of_slots_and_mesh(self, tp_mesh):
         """The traced fused step is one batched program: its equation
         count must not grow with the slot count, and sharding is a
         compile-time property — tracing under different TP meshes yields
-        the identical program."""
-        cfg = _family_cfg("dense", QuantConfig(mode="off"))
-        sizes = set()
-        for tp in (1, 2, 4):
-            shd.set_tp_mesh(make_tp_mesh(tp))  # visible to any TP-aware path
-            try:
-                sizes.add(self._eqns(cfg, 2))
-                sizes.add(self._eqns(cfg, 6))
-            finally:
-                shd.set_tp_mesh(None)
-        assert len(sizes) == 1, sizes
+        the identical program. Migrated to the registered tracing
+        contract, whose axes cover the n_slots × tp cross product and
+        which additionally enforces the structural serving rules (zero
+        host callbacks, no uint8 pads)."""
+        from repro.analysis import run_contract
+
+        findings, meta = run_contract("serve.fused_decode_step")
+        assert not findings, findings
+        # with 8 virtual devices every combo traces live — none skipped
+        assert not meta["skipped"], meta
+        assert len(meta["eqn_counts"]) == 6, meta
 
     def test_jaxpr_size_compressed_tp_mesh_independent(self, tp_mesh):
         """Even the explicit shard_map route (compress_tp) traces to the
         same equation count for every mesh size — the collective is one
-        primitive regardless of how many devices sit under the axis."""
+        primitive regardless of how many devices sit under the axis.
+        Checked both at the execute_tp level (registered contract) and
+        through the dense() layer route (inline audit_invariance)."""
+        from repro.analysis import TraceContract, audit_invariance, run_contract
+
+        findings, meta = run_contract("execution.execute_tp.compressed")
+        assert not findings, findings
+        assert not meta["skipped"], meta
+
         x = jnp.ones((4, 64), jnp.float32)
         w = jnp.ones((64, 32), jnp.float32)
         qc = QuantConfig(mode="cim", tp_reduce="int8")
-        sizes = set()
-        for tp in (2, 4):
-            shd.set_tp_mesh(make_tp_mesh(tp))
-            try:
-                closed = jax.make_jaxpr(
-                    lambda a, b: dense(a, b, qc, tp="row"))(x, w)
-                sizes.add(len(closed.jaxpr.eqns))
-            finally:
-                shd.set_tp_mesh(None)
-        assert len(sizes) == 1, sizes
+
+        def build(tp):
+            mesh = make_tp_mesh(tp)
+
+            def f(a, b):
+                shd.set_tp_mesh(mesh)
+                try:
+                    return dense(a, b, qc, tp="row")
+                finally:
+                    shd.set_tp_mesh(None)
+
+            return f, (x, w)
+
+        findings, meta = audit_invariance(
+            build, {"tp": (2, 4)},
+            contract=TraceContract(max_host_callbacks=0),
+            name="tp_serve.dense_row_compressed")
+        assert not findings, findings
 
     def test_host_syncs_per_token_unchanged_by_tp(self, tp_mesh):
         """TP must not add device->host chatter: same decode_steps, same
