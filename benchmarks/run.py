@@ -13,6 +13,9 @@
   bench_roofline — §Roofline table from the dry-run artifacts
   bench_serve    — serving throughput: fused ragged-position decode vs
                    the per-slot-loop baseline (emits BENCH_serve.json)
+  bench_calibrate— profile -> calibrate -> replay: fit the cost model to
+                   measured kernel/step times, replay a holdout serve
+                   run, gate on prediction error (emits BENCH_calib.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <name>]
 """
@@ -31,6 +34,7 @@ def main() -> None:
         bench_ablation,
         bench_accuracy,
         bench_array,
+        bench_calibrate,
         bench_kernels,
         bench_mac,
         bench_roofline,
@@ -47,6 +51,7 @@ def main() -> None:
         "mac": bench_mac,
         "roofline": bench_roofline,
         "serve": bench_serve,
+        "calibrate": bench_calibrate,
     }
     names = [args.only] if args.only else list(suites)
     for name in names:

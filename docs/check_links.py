@@ -1,0 +1,107 @@
+"""Intra-repo markdown link checker (stdlib-only; the CI docs job runs it).
+
+Scans every tracked ``*.md`` under the repo root, extracts inline
+markdown links, and verifies:
+
+  * relative-path targets exist on disk;
+  * ``#anchor`` fragments (bare or on an ``.md`` target) resolve to a
+    heading in the target file, using GitHub's slug rules (lowercase,
+    spaces -> dashes, punctuation dropped);
+
+External links (``http://``, ``https://``, ``mailto:``) are ignored —
+this gate is about the repo's own docs not rotting.
+
+Usage:
+    python docs/check_links.py [ROOT]     # exit 1 + report on dead links
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading: strip markdown emphasis/code
+    ticks, lowercase, drop everything but word chars/spaces/dashes,
+    spaces to dashes."""
+    text = re.sub(r"[*_`]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.lower().replace(" ", "-")
+
+
+def heading_slugs(md_text: str) -> set:
+    """All anchor slugs a markdown file exposes (fences excluded so a
+    ``# comment`` inside a code block is not a heading)."""
+    text = CODE_FENCE_RE.sub("", md_text)
+    slugs = set()
+    counts: dict = {}
+    for m in HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def markdown_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def check(root: Path):
+    """Return a list of ``(file, link, reason)`` problems."""
+    problems = []
+    slug_cache = {}
+
+    def slugs_of(path: Path) -> set:
+        if path not in slug_cache:
+            slug_cache[path] = heading_slugs(path.read_text())
+        return slug_cache[path]
+
+    for md in markdown_files(root):
+        text = CODE_FENCE_RE.sub("", md.read_text())
+        for m in LINK_RE.finditer(text):
+            link = m.group(1)
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, anchor = link.partition("#")
+            if target:
+                dest = (md.parent / target).resolve()
+                if not dest.exists():
+                    problems.append((md, link, f"missing file {target}"))
+                    continue
+            else:
+                dest = md
+            if anchor:
+                if dest.suffix != ".md" or dest.is_dir():
+                    continue  # anchors into non-markdown: not checkable
+                if anchor not in slugs_of(dest):
+                    problems.append(
+                        (md, link,
+                         f"no heading for #{anchor} in {dest.name}"))
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parents[1]
+    problems = check(root)
+    n_files = sum(1 for _ in markdown_files(root))
+    if problems:
+        for md, link, reason in problems:
+            print(f"{md.relative_to(root)}: ({link}) -> {reason}")
+        print(f"[check_links] {len(problems)} dead link(s) in {n_files} files")
+        return 1
+    print(f"[check_links] ok: {n_files} markdown files, no dead intra-repo links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,13 @@ Rules (ids are stable — they key the baseline ratchet):
       ``register_dataclass``) — passed through jit it dies as a leaf
       of unknown type; as a static arg it is unhashable.
 
+  docstring-missing (P3)
+      a public function/class reachable from the export surfaces
+      (``repro.api``, ``repro.hw``) without a docstring — these two
+      modules ARE the documented API; an undocumented export is a
+      docs bug, ratcheted like any other finding
+      (:func:`docstring_findings`, a separate whole-surface pass).
+
 Suppression — *at the offending line* (same line or the line above),
 with a justification::
 
@@ -54,6 +61,7 @@ from repro.analysis.jaxpr_audit import Finding
 #: packages under src/repro whose code is reachable from a jit trace
 TRACED_PACKAGES = (
     "core", "models", "kernels", "serve", "quant", "dist", "train", "optim",
+    "profile",
 )
 
 _SUPPRESS_RE = re.compile(r"#\s*analysis:\s*([a-z0-9-]+)\s+ok\b")
@@ -77,6 +85,7 @@ _SEVERITY = {
     "tracer-branch": "P2",
     "static-arg-hazard": "P2",
     "dataclass-unregistered": "P3",
+    "docstring-missing": "P3",
 }
 
 
@@ -318,4 +327,111 @@ def lint_paths(root: Path, packages: Iterable[str] = TRACED_PACKAGES) -> List[Fi
             continue
         rel = str(f.relative_to(Path(root)))
         findings.extend(lint_source(f.read_text(), rel))
+    return sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# Docstring coverage over the public export surfaces
+# ---------------------------------------------------------------------------
+
+#: the export surfaces whose re-exported defs the docstring rule covers
+_EXPORT_SURFACES = ("api.py", "hw/__init__.py")
+
+
+def _surface_exports(tree: ast.Module) -> List[Tuple[str, str]]:
+    """(module, exported-name) pairs an export surface re-exports from
+    inside ``repro.`` (constants and third-party names drop out later —
+    only def/class statements are docstring-checkable)."""
+    out: List[Tuple[str, str]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ImportFrom) or not node.module:
+            continue
+        if node.level or not node.module.startswith("repro"):
+            continue
+        for a in node.names:
+            if a.name != "*" and not a.name.startswith("_"):
+                out.append((node.module, a.name))
+    return out
+
+
+def _resolve_export(src_root: Path, module: str, name: str, _depth: int = 0):
+    """Find the def/class statement behind ``from <module> import
+    <name>``: the module file's top-level def, following at most one
+    re-export level through a package ``__init__``. Returns
+    ``(path, defnode)`` or None (constants, aliases, unresolvable)."""
+    mod_path = src_root / Path(*module.split("."))
+    if (mod_path / "__init__.py").exists():
+        path = mod_path / "__init__.py"
+    elif mod_path.with_suffix(".py").exists():
+        path = mod_path.with_suffix(".py")
+    else:
+        return None
+    try:
+        tree = ast.parse(path.read_text())
+    except SyntaxError:
+        return None
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node.name == name:
+            return path, node
+    if _depth >= 1:
+        return None
+    for node in tree.body:  # one re-export hop (package __init__)
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and not node.level and node.module.startswith("repro"):
+            for a in node.names:
+                if (a.asname or a.name) == name:
+                    return _resolve_export(src_root, node.module, a.name,
+                                           _depth + 1)
+    return None
+
+
+def docstring_findings(root: Path) -> List[Finding]:
+    """The docstring-coverage pass (rule ``docstring-missing``, P3):
+    every public function/class reachable from the export surfaces
+    (``repro.api``, ``repro.hw``) must carry a docstring. Same
+    suppression marker discipline as the AST rules."""
+    src_root = Path(root) / "src"
+    base = src_root / "repro"
+    findings: List[Finding] = []
+    seen = set()
+    lines_cache: dict = {}
+    for surface in _EXPORT_SURFACES:
+        spath = base / surface
+        if not spath.exists():
+            continue
+        surface_mod = "repro." + surface.replace("/__init__.py", "").replace(
+            ".py", "").replace("/", ".")
+        for module, name in _surface_exports(ast.parse(spath.read_text())):
+            res = _resolve_export(src_root, module, name)
+            if res is None:
+                continue
+            path, defnode = res
+            key = (str(path), defnode.lineno)
+            if key in seen:
+                continue
+            seen.add(key)
+            if ast.get_docstring(defnode) is not None:
+                continue
+            if str(path) not in lines_cache:
+                lines_cache[str(path)] = path.read_text().splitlines()
+            lines = lines_cache[str(path)]
+            first = min([defnode.lineno] + [d.lineno
+                                           for d in defnode.decorator_list])
+            if any(
+                (m := _SUPPRESS_RE.search(lines[ln - 1]))
+                and m.group(1) in ("docstring-missing", "all")
+                for ln in (defnode.lineno, defnode.lineno - 1, first,
+                           first - 1)
+                if 1 <= ln <= len(lines)
+            ):
+                continue
+            kind = "class" if isinstance(defnode, ast.ClassDef) else "function"
+            findings.append(Finding(
+                severity=_SEVERITY["docstring-missing"], engine="lint",
+                rule="docstring-missing",
+                where=f"{path.relative_to(Path(root))}:{defnode.lineno}",
+                message=f"public {kind} `{name}` (exported via "
+                        f"{surface_mod}) has no docstring",
+            ))
     return sorted(findings)

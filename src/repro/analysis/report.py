@@ -47,6 +47,7 @@ def build_report(
     contract_meta: Dict[str, Any] = {}
     if lint:
         findings.extend(L.lint_paths(root))
+        findings.extend(L.docstring_findings(root))
     if audit:
         for point in C.registered_trace_contracts():
             f, meta = J.run_contract(point)

@@ -166,6 +166,10 @@ class CiMExecSpec:
 
 @dataclasses.dataclass(frozen=True)
 class BackendEntry:
+    """One registered MAC kernel: the callable plus the registry's
+    static metadata about it (whether the formulation clamps, and the
+    tile table for tiled backends) — see :func:`register_backend`."""
+
     fn: Callable  # fn(x2d, w, spec[, tiles]) -> (M, N); K padded to block
     clamps: bool  # whether the formulation applies the ADC clamp
     # (m, k, n) -> (bm, bk, bn) tile table; None = kernel has no tiling
@@ -210,6 +214,8 @@ def register_backend(name, fn: Callable, *, clamps: bool = True,
 
 
 def get_backend(spec: CiMExecSpec) -> BackendEntry:
+    """The :class:`BackendEntry` registered for ``spec`` (after
+    ``resolve()``); raises KeyError listing the known keys."""
     key = spec.resolve().registry_key
     entry = _REGISTRY.get(key)
     if entry is None:
@@ -313,11 +319,18 @@ def autotune(
     *,
     candidates: Optional[Dict[str, Tuple[Tuple[int, int, int], ...]]] = None,
     repeats: int = 3,
+    calibration=None,
 ) -> Dict[str, Dict]:
     """Benchmark the registered tile candidates for ``spec`` on one
     representative (M, K, N) per shape class and cache the winners —
     every later :func:`execute`/:func:`execute_packed` at that
     (spec, shape-class) picks them up (new traces; run before serving).
+
+    With ``calibration=`` (a ``repro.profile.CalibrationTable`` or any
+    object with a ``tile_winners`` mapping), no timing runs: the table's
+    recorded winners for ``spec`` are validated and installed directly —
+    replaying a past autotune instead of re-measuring on a possibly
+    noisy host.
 
     Returns ``{shape_class: {"tiles": winner, "us": best_us,
     "candidates": {"bmxbkxbn": us}}}``. Raises for untiled backends —
@@ -333,6 +346,28 @@ def autotune(
             f"{spec.name} has no tile table to autotune (jnp backends "
             f"lower through XLA; only tiled pallas entries tune)"
         )
+    if calibration is not None:
+        winners = dict(getattr(calibration, "tile_winners", {}) or {})
+        per_spec = winners.get(spec.name)
+        if not per_spec:
+            raise ValueError(
+                f"calibration table has no tile winners for {spec.name} "
+                f"(known: {sorted(winners)})"
+            )
+        report = {}
+        for cls, tiles in sorted(per_spec.items()):
+            if cls not in SHAPE_CLASSES:
+                raise ValueError(f"unknown shape class {cls!r} in calibration")
+            tiles = tuple(int(t) for t in tiles)
+            if len(tiles) != 3 or not _tiles_valid(spec, tiles):
+                raise ValueError(
+                    f"calibrated tiles {tiles} invalid for {spec.name} "
+                    f"(block={spec.block})"
+                )
+            _TILE_CACHE[(spec.registry_key, spec.block, cls)] = tiles
+            report[cls] = {"tiles": tiles, "us": None, "candidates": {},
+                           "source": "calibration"}
+        return report
     key = jax.random.PRNGKey(0)
     report: Dict[str, Dict] = {}
     for m, k, n in shapes:
@@ -466,6 +501,55 @@ _ste_execute.defvjp(_ste_fwd, _ste_bwd)
 _jit_execute = jax.jit(_ste_execute, static_argnums=(0, 1))
 
 
+# ---------------------------------------------------------------------------
+# Profiler sink (repro.profile.trace — DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+#: installed by repro.profile.trace.set_profiler; None = profiling off.
+#: The disabled cost is one None comparison per entry-point call.
+_PROFILE_SINK: Optional[Callable] = None
+
+
+def set_profile_sink(sink: Optional[Callable]) -> None:
+    """Install (or, with None, remove) the kernel-event sink the eager
+    ``execute``/``execute_packed`` entry points report wall times to.
+    Wired by :func:`repro.profile.trace.set_profiler` — use that, not
+    this, unless you are building a custom trace consumer."""
+    global _PROFILE_SINK
+    _PROFILE_SINK = sink
+
+
+def _profiled_call(entry, spec, probe, m, k, n, weight_bytes, thunk):
+    """Run ``thunk()``; when a profiler sink is installed AND the call
+    is eager (``probe`` is not a tracer — timing under a jit trace is
+    meaningless and would force a callback into the jaxpr), time it and
+    emit one kernel-level trace event."""
+    sink = _PROFILE_SINK
+    if sink is None or isinstance(probe, jax.core.Tracer):
+        return thunk()
+    import time
+
+    t0 = time.perf_counter()
+    out = thunk()
+    t1 = time.perf_counter()
+    # analysis: host-sync ok — profiler wall-time capture; opt-in (sink
+    # installed) and never under a jit trace (tracer-probed above)
+    jax.block_until_ready(out)
+    t2 = time.perf_counter()
+    sink(
+        entry_point=entry,
+        exec_spec=spec.name,
+        shape_class=_CLASS_OVERRIDE or shape_class(m),
+        mesh=None,
+        wall_us=(t2 - t0) * 1e6,
+        dispatch_us=(t1 - t0) * 1e6,
+        meta={"m": int(m), "k": int(k), "n": int(n),
+              "macs": int(m) * int(k) * int(n),
+              "weight_bytes": int(weight_bytes)},
+    )
+    return out
+
+
 def _apply_sense_channel(spec, out, k_dim, key):
     """Shared post-MAC sensing-error application (validation + noise)."""
     if spec.error_prob <= 0.0:
@@ -521,8 +605,13 @@ def execute(
     spec = spec.resolve()
     clean = dataclasses.replace(spec, error_prob=0.0)
     m = math.prod(x_t.shape[:-1])
-    tiles = tiles_for(clean, m, x_t.shape[-1], w_t.shape[-1])
-    out = _jit_execute(clean, tiles, x_t, w_t)
+    k_dim, n_dim = x_t.shape[-1], w_t.shape[-1]
+    tiles = tiles_for(clean, m, k_dim, n_dim)
+    out = _profiled_call(
+        "execution.execute", clean, x_t, m, k_dim, n_dim,
+        k_dim * n_dim * jnp.dtype(w_t.dtype).itemsize,
+        lambda: _jit_execute(clean, tiles, x_t, w_t),
+    )
     return _apply_sense_channel(spec, out, x_t.shape[-1], key)
 
 
@@ -616,8 +705,13 @@ def execute_packed(
         n_out = w_pos.shape[-1]
     clean = dataclasses.replace(spec, error_prob=0.0)
     m = math.prod(x_t.shape[:-1])
-    tiles = tiles_for(clean, m, w_pos.shape[0] * 8, w_pos.shape[-1])
-    out = _packed_forward(clean, tiles, x_t, w_pos, w_neg, n_out)
+    k_dim = w_pos.shape[0] * 8
+    tiles = tiles_for(clean, m, k_dim, w_pos.shape[-1])
+    out = _profiled_call(
+        "execution.execute_packed", clean, x_t, m, k_dim, n_out,
+        int(w_pos.size) + int(w_neg.size),
+        lambda: _packed_forward(clean, tiles, x_t, w_pos, w_neg, n_out),
+    )
     return _apply_sense_channel(spec, out, x_t.shape[-1], key)
 
 
@@ -981,6 +1075,9 @@ def spec_array_cost(spec: CiMExecSpec, tech=None, array=None):
 def spec_cost_summary(
     spec: CiMExecSpec, tech=None, array=None
 ) -> Dict[str, float]:
+    """JSON-ready per-MAC-pass cost summary of ``spec`` on the bound
+    array (same binding rules as :func:`spec_array_cost`): technology /
+    design names plus the pass latency, energy, and relative area."""
     from repro import hw
 
     bound = _bind_array(spec, tech, array)

@@ -118,6 +118,10 @@ def conv(name: str, h_out: int, c_in: int, kh: int, c_out: int,
 
 @dataclasses.dataclass(frozen=True)
 class SystemResult:
+    """One (benchmark, tech, design) row of the system-level evaluation:
+    total time/energy/MACs of the benchmark's layers on ``n_arrays``
+    arrays (the unit :func:`system_eval` aggregates over)."""
+
     benchmark: str
     tech: str
     design: str
@@ -220,6 +224,9 @@ def speedup_and_energy(tech: str, design: str, baseline: str = "iso-capacity",
 
 def average_speedup(tech: str, design: str, baseline: str,
                     macro: MacroSpec = PAPER_MACRO) -> float:
+    """Geometric-mean-free average of per-benchmark speedups of
+    ``design`` on ``tech`` against ``baseline`` ("iso-capacity" /
+    "iso-area") — the Figs 12/13 headline aggregation."""
     res = speedup_and_energy(tech, design, baseline, macro)
     vals = [v["speedup"] for v in res.values()]
     return float(sum(vals) / len(vals))
@@ -228,6 +235,8 @@ def average_speedup(tech: str, design: str, baseline: str,
 def average_energy_reduction(tech: str, design: str,
                              baseline: str = "iso-capacity",
                              macro: MacroSpec = PAPER_MACRO) -> float:
+    """Average per-benchmark energy reduction of ``design`` on ``tech``
+    against ``baseline`` (companion to :func:`average_speedup`)."""
     res = speedup_and_energy(tech, design, baseline, macro)
     vals = [v["energy_reduction"] for v in res.values()]
     return float(sum(vals) / len(vals))

@@ -106,6 +106,9 @@ def register_technology(spec: TechnologySpec) -> TechnologySpec:
 
 
 def register_design(spec: DesignSpec) -> DesignSpec:
+    """Register a CiM/NM design point by name (returns ``spec`` so it
+    can be used inline); technologies reference designs by these
+    names."""
     if not spec.name:
         raise ValueError("design needs a name")
     _DESIGNS[spec.name] = spec
@@ -118,6 +121,8 @@ def unregister_technology(name: str) -> None:
 
 
 def get_technology(name: str) -> TechnologySpec:
+    """The registered :class:`TechnologySpec` for ``name``; raises
+    KeyError listing the registered technologies."""
     try:
         return _TECHNOLOGIES[name]
     except KeyError:
@@ -128,6 +133,8 @@ def get_technology(name: str) -> TechnologySpec:
 
 
 def get_design(name: str) -> DesignSpec:
+    """The registered :class:`DesignSpec` for ``name``; raises KeyError
+    listing the registered designs."""
     try:
         return _DESIGNS[name]
     except KeyError:
@@ -143,6 +150,7 @@ def technologies() -> Tuple[str, ...]:
 
 
 def designs() -> Tuple[str, ...]:
+    """Registered design names, registration order."""
     return tuple(_DESIGNS)
 
 

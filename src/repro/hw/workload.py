@@ -174,7 +174,8 @@ def _resolve(arch, shape):
 
 
 def project(arch, shape, array: ArraySpec,
-            macro: MacroSpec = PAPER_MACRO) -> Dict[str, object]:
+            macro: MacroSpec = PAPER_MACRO,
+            calibration=None) -> Dict[str, object]:
     """Run one (arch, shape) cell through the system model on ``array``.
 
     arch: registry id ("yi-34b") or an ArchConfig; shape: registry shape
@@ -182,6 +183,13 @@ def project(arch, shape, array: ArraySpec,
     the CiM macro's projected time/energy/throughput and the speedup /
     energy-reduction against the iso-capacity and iso-area NM baselines
     built from the same technology.
+
+    ``calibration``: a fitted cost table (``repro.profile.calibrate.
+    CalibrationTable`` — anything with ``predict_gemm_us(m, k, n)`` and
+    ``version``/``backend`` attributes). When given, the same workload
+    is additionally costed through the *measured* host-kernel fits and
+    reported under ``out["calibrated"]`` next to the analytic CiM
+    numbers — the measured-vs-modeled split DESIGN.md §11 describes.
     """
     cfg, shape = _resolve(arch, shape)
     layers = workload_layers(cfg, shape)
@@ -203,6 +211,31 @@ def project(arch, shape, array: ArraySpec,
     nm_arrays_ia = iso_area_nm_arrays(array, macro)
     t_ia, e_ia, _ = total(nm, nm_arrays_ia)
     tokens = _token_bases(cfg, shape)["tokens"]
+    calibrated = None
+    if calibration is not None:
+        if not getattr(calibration, "kernels", True):
+            # an engine-only trace (e.g. launch/serve --profile) fits no
+            # kernels — say so instead of KeyError-ing per layer below
+            raise ValueError(
+                "calibration table has no kernel fits to cost the workload "
+                "with — capture eager execute events (profile.set_profiler) "
+                "or run benchmarks/bench_calibrate.py to fit them"
+            )
+        t_us = sum(
+            calibration.predict_gemm_us(layer.m, layer.k, layer.n) * count
+            for layer, count in layers
+        )
+        calibrated = {
+            "source": {
+                "version": getattr(calibration, "version", None),
+                "backend": getattr(calibration, "backend", None),
+            },
+            "time_us": t_us,
+            "tok_s": tokens / max(t_us * 1e-6, 1e-12),
+            # measured host kernels vs the analytic CiM projection —
+            # how much faster the modeled array is than this host
+            "cim_speedup_vs_host": (t_us * 1e3) / max(t_cim, 1e-12),
+        }
     return {
         "arch": cfg.name,
         "family": cfg.family,
@@ -227,4 +260,5 @@ def project(arch, shape, array: ArraySpec,
             "speedup": t_ia / t_cim,
             "energy_reduction": e_ia / e_cim,
         },
+        "calibrated": calibrated,
     }

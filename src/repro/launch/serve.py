@@ -79,6 +79,11 @@ def main(argv=None):
                          "pre-packed planes for bitplane_u8 packing")
     ap.add_argument("--pre-quantize", action="store_true",
                     help="fold ternarization into weights offline")
+    ap.add_argument("--profile", default=None, metavar="TRACE.jsonl",
+                    help="record per-step timing events (serve.prefill / "
+                         "serve.decode_step / serve.prepare) to a JSON-lines "
+                         "trace file — repro.profile reads it back for "
+                         "calibration and replay")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -102,7 +107,7 @@ def main(argv=None):
         params, cfg, n_slots=args.slots, s_max=args.s_max,
         exec_spec=exec_spec, temperature=args.temperature, seed=args.seed,
         fused=not args.loop_decode, prepare_weights=args.prepare_weights,
-        mesh=mesh, compress_tp=args.compress_tp,
+        mesh=mesh, compress_tp=args.compress_tp, profile=args.profile,
     )
     reqs = [
         Request(i, [1 + (i * 7 + j) % (cfg.vocab - 1) for j in range(1 + i % 4)],
@@ -123,6 +128,9 @@ def main(argv=None):
           f"({'looped' if args.loop_decode else 'fused'} decode"
           + (f", tp={args.tp}" + (" int8-compressed" if args.compress_tp else "")
              if args.tp > 1 else "") + ")")
+    if args.profile:
+        n_ev = len(batcher.profiler.events)
+        print(f"[serve] profile: {n_ev} trace events -> {args.profile}")
     assert all(r.done for r in reqs)
     return 0
 

@@ -1,0 +1,50 @@
+"""``repro.profile`` — measured-time observability for the hardware
+model: profile → calibrate → replay (DESIGN.md §11).
+
+  * :mod:`repro.profile.trace` — opt-in per-op trace capture around the
+    jitted segments of the serving engine and the execution shim
+    (``ContinuousBatcher(profile=...)`` / ``launch/serve --profile`` /
+    :func:`set_profiler`), JSON-lines events;
+  * :mod:`repro.profile.calibrate` — least-squares fit of the cost
+    parameters (per-MAC latency scale, weight-DMA bandwidth, per-step
+    fixed overhead) against measured kernel times, emitting a versioned
+    :class:`CalibrationTable` that ``hw.project(calibration=...)`` and
+    ``execution.autotune(calibration=...)`` consume;
+  * :mod:`repro.profile.replay` — dependency-graph replay of a serving
+    workload under predicted segment times: serve tok/s and p50/p99
+    step latency for arbitrary (arch × ArraySpec × mesh × occupancy)
+    points, validated by a predicted-vs-measured error bound
+    (benchmarks/bench_calibrate.py → BENCH_calib.json).
+"""
+from repro.profile.calibrate import (  # noqa: F401
+    CALIBRATION_VERSION,
+    CalibrationTable,
+    EngineFit,
+    KernelFit,
+    calibrate,
+    fit_engines,
+    fit_kernel,
+    fit_kernels,
+)
+from repro.profile.replay import (  # noqa: F401
+    Node,
+    ReplayRequest,
+    compare_to_measured,
+    make_array_kernel_model,
+    make_kernel_model,
+    predict_decode_step_us,
+    requests_from_trace,
+    requests_like_bench,
+    simulate,
+)
+from repro.profile.trace import (  # noqa: F401
+    TRACE_SCHEMA_VERSION,
+    Profiler,
+    TraceEvent,
+    current_profiler,
+    event_from_json,
+    read_trace,
+    set_profiler,
+    validate_event,
+    wrap_step,
+)

@@ -1,0 +1,319 @@
+"""Trace replay — the "replay" leg of profile → calibrate → replay
+(DESIGN.md §11).
+
+A discrete-event simulator that mirrors the ``ContinuousBatcher``'s
+slot discipline (fill slots → batched left-padded prefill → fused
+decode step over all slots, until the queue drains) and advances a
+simulated clock by **predicted** segment times from a
+:class:`~repro.profile.calibrate.CalibrationTable` — so serve tok/s and
+p50/p99 step latency can be projected for arbitrary
+(arch × ArraySpec × mesh × slot-occupancy) points without running the
+model.
+
+The replay builds an explicit dependency graph (:class:`Node`): every
+prefill/decode node depends on the nodes whose cache state it consumes.
+In the current single-stream engine the graph is a chain — kept
+explicit because the node set is what a multi-stream scheduler would
+re-order, and because the graph is the honest record of *why* the
+predicted wall is the sum it is.
+
+Step-time model::
+
+    decode_step_us(occupancy) = engines[arch|mesh].decode_fixed_us
+                              + Σ_gemms kernel_fit.predict_us(occupancy, k, n)
+    prefill_us                = engines[arch|mesh].prefill_us
+
+With ``array=`` (an :class:`repro.hw.ArraySpec`), the kernel share is
+costed by the **analytic** hardware model instead
+(:func:`repro.hw.macro.layer_cost` on the paper's macro) while the
+fitted per-step fixed overhead is kept — projecting what this host's
+serving loop would sustain if the MACs ran inside CiM arrays. That is
+the bridge between the measured engine and the paper's Figs 12/13
+claims.
+
+Validated (tests/test_profile.py + benchmarks/bench_calibrate.py) by a
+predicted-vs-measured error bound on the decode-step p50 of a holdout
+profiled run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.profile.calibrate import CalibrationTable, mesh_tag
+from repro.profile.trace import TraceEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayRequest:
+    """One simulated request: only the lengths matter for timing."""
+
+    rid: int
+    prompt_len: int
+    max_new: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One node of the replay dependency graph."""
+
+    nid: int
+    kind: str                  # "prefill" | "decode"
+    deps: Tuple[int, ...]      # node ids whose outputs this node consumes
+    us: float                  # predicted duration
+    start_us: float            # max(end of deps)
+    occupancy: int             # active slots (decode) / filled slots (prefill)
+
+    @property
+    def end_us(self) -> float:
+        return self.start_us + self.us
+
+
+def requests_like_bench(vocab: int, n_requests: int, max_new: int
+                        ) -> List[ReplayRequest]:
+    """The deterministic ragged mix benchmarks/bench_serve.py submits,
+    reduced to its lengths (prompt 1–4 tokens, ragged max_new)."""
+    return [ReplayRequest(i, 1 + i % 4, 2 + i % max_new)
+            for i in range(n_requests)]
+
+
+def requests_from_trace(events: Sequence[TraceEvent]) -> List[ReplayRequest]:
+    """Reconstruct the request mix a profiled serve run processed, from
+    its prefill events' ``prompts`` meta (recorded by the engine hook)."""
+    out: List[ReplayRequest] = []
+    for e in events:
+        if e.entry_point != "serve.prefill":
+            continue
+        for rid, p_len, max_new in e.meta.get("prompts", []):
+            out.append(ReplayRequest(int(rid), int(p_len), int(max_new)))
+    return sorted(out, key=lambda r: r.rid)
+
+
+def _next_pow2(n: int, lo: int = 4) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
+
+
+def make_kernel_model(
+    table: CalibrationTable,
+    cfgs: Mapping[str, object],
+    spec: Optional[str] = None,
+) -> Callable[[str, int], float]:
+    """``(arch, occupancy) -> us``: the fitted kernel model summed over
+    the arch's weight-bearing decode GEMMs at M = occupancy
+    (``repro.hw.workload`` owns the GEMM enumeration). Unknown archs
+    cost 0 — the engine fit then absorbs everything into the fixed
+    term."""
+    from repro.hw.workload import workload_layers
+    from repro.models.registry import ShapeCell
+
+    cache: Dict[Tuple[str, int], float] = {}
+
+    def kernel_us(arch: str, occupancy: int) -> float:
+        key = (arch, occupancy)
+        if key not in cache:
+            cfg = cfgs.get(arch)
+            if cfg is None:
+                cache[key] = 0.0
+            else:
+                shape = ShapeCell("replay_decode", "decode", 1,
+                                  max(1, occupancy))
+                cache[key] = sum(
+                    table.predict_gemm_us(layer.m, layer.k, layer.n, spec)
+                    * count
+                    for layer, count in workload_layers(cfg, shape)
+                )
+        return cache[key]
+
+    return kernel_us
+
+
+def make_array_kernel_model(
+    cfgs: Mapping[str, object],
+    array,
+    macro=None,
+) -> Callable[[str, int], float]:
+    """Analytic variant of :func:`make_kernel_model`: cost the decode
+    GEMMs on a CiM ``array`` through the paper's macro model instead of
+    the fitted host kernels (the ArraySpec axis of the replay space)."""
+    from repro.hw.array import array_cost
+    from repro.hw.macro import PAPER_MACRO, layer_cost
+    from repro.hw.workload import workload_layers
+    from repro.models.registry import ShapeCell
+
+    macro = macro or PAPER_MACRO
+    cost = array_cost(array)
+    cache: Dict[Tuple[str, int], float] = {}
+
+    def kernel_us(arch: str, occupancy: int) -> float:
+        key = (arch, occupancy)
+        if key not in cache:
+            cfg = cfgs.get(arch)
+            if cfg is None:
+                cache[key] = 0.0
+            else:
+                shape = ShapeCell("replay_decode", "decode", 1,
+                                  max(1, occupancy))
+                t_ns = sum(
+                    layer_cost(layer, array, macro.n_arrays, macro,
+                               cost=cost)[0] * count
+                    for layer, count in workload_layers(cfg, shape)
+                )
+                cache[key] = t_ns * 1e-3
+        return cache[key]
+
+    return kernel_us
+
+
+def predict_decode_step_us(
+    table: CalibrationTable,
+    arch: str,
+    occupancy: int,
+    *,
+    mesh: str = "tp1",
+    kernel_model: Optional[Callable[[str, int], float]] = None,
+) -> float:
+    """Predicted wall time of one fused decode step at ``occupancy``
+    active slots: the fitted per-step fixed overhead plus the kernel
+    model's share (0 when no kernel model is supplied — the fixed term
+    then already contains the median MAC cost it was fitted with)."""
+    fit = table.engine_fit(arch, mesh)
+    kern = kernel_model(arch, occupancy) if kernel_model is not None else 0.0
+    return fit.decode_fixed_us + kern
+
+
+def simulate(
+    table: CalibrationTable,
+    arch: str,
+    requests: Sequence[ReplayRequest],
+    *,
+    n_slots: int = 4,
+    s_max: int = 64,
+    mesh: str = "tp1",
+    kernel_model: Optional[Callable[[str, int], float]] = None,
+) -> Dict[str, object]:
+    """Replay one continuous-batching workload through the predicted
+    clock. Mirrors ``ContinuousBatcher``'s host discipline exactly
+    (batched pow-2-bucketed prefill, fused step over active slots,
+    immediate refill, the s_max - 1 capacity cutoff) so predicted step
+    *counts* match the engine's and only the *durations* come from the
+    calibration.
+
+    Returns predicted ``tok_s``, ``p50_step_us`` / ``p99_step_us`` over
+    the decode steps, totals, and the dependency ``graph`` (the Node
+    list, JSON-ready)."""
+    fit = table.engine_fit(arch, mesh)
+    queue = list(requests)
+    slots: List[Optional[ReplayRequest]] = [None] * n_slots
+    produced: List[int] = [0] * n_slots
+    pos: List[int] = [0] * n_slots
+
+    nodes: List[Node] = []
+    last_nid: Optional[int] = None  # chain dep: the node owning cache state
+    step_durs: List[float] = []
+    tokens = 0
+    clock = 0.0
+
+    def _finish(s: int) -> None:
+        slots[s] = None
+
+    while queue or any(r is not None for r in slots):
+        # -- fill slots + batched prefill (engine: _fill_slots_fused) --
+        newly = []
+        for s in range(n_slots):
+            if slots[s] is None and queue:
+                slots[s] = queue.pop(0)
+                newly.append(s)
+        if newly:
+            max_len = max(slots[s].prompt_len for s in newly)
+            s_pad = _next_pow2(max_len)
+            if s_pad >= s_max:
+                s_pad = max_len
+            deps = (last_nid,) if last_nid is not None else ()
+            start = max((nodes[d].end_us for d in deps), default=clock)
+            node = Node(len(nodes), "prefill", deps, fit.prefill_us,
+                        start, len(newly))
+            nodes.append(node)
+            last_nid = node.nid
+            clock = node.end_us
+            for s in newly:
+                produced[s] = 1           # prefill samples the first token
+                tokens += 1
+                pos[s] = s_pad
+                if produced[s] >= slots[s].max_new:
+                    _finish(s)
+        active = [s for s in range(n_slots) if slots[s] is not None]
+        if not active:
+            if queue:
+                continue
+            break
+        # -- one fused decode step (engine: _step_fused) ---------------
+        occ = len(active)
+        us = predict_decode_step_us(table, arch, occ, mesh=mesh,
+                                    kernel_model=kernel_model)
+        deps = (last_nid,) if last_nid is not None else ()
+        start = max((nodes[d].end_us for d in deps), default=clock)
+        node = Node(len(nodes), "decode", deps, us, start, occ)
+        nodes.append(node)
+        last_nid = node.nid
+        clock = node.end_us
+        step_durs.append(us)
+        for s in active:
+            produced[s] += 1
+            tokens += 1
+            pos[s] += 1
+            if produced[s] >= slots[s].max_new or pos[s] >= s_max - 1:
+                _finish(s)
+
+    total_us = max((n.end_us for n in nodes), default=0.0)
+    return {
+        "arch": arch,
+        "mesh": mesh,
+        "n_slots": n_slots,
+        "s_max": s_max,
+        "tokens": tokens,
+        "decode_steps": len(step_durs),
+        "prefill_batches": sum(1 for n in nodes if n.kind == "prefill"),
+        "total_us": round(total_us, 2),
+        "tok_s": round(tokens / max(total_us * 1e-6, 1e-12), 2),
+        "p50_step_us": round(float(np.percentile(step_durs, 50)), 2)
+        if step_durs else 0.0,
+        "p99_step_us": round(float(np.percentile(step_durs, 99)), 2)
+        if step_durs else 0.0,
+        "graph": [dataclasses.asdict(n) for n in nodes],
+    }
+
+
+def compare_to_measured(
+    predicted: Mapping[str, object],
+    events: Sequence[TraceEvent],
+) -> Dict[str, float]:
+    """Predicted-vs-measured validation against a profiled run's decode
+    events: relative error of the p50 step time (the bound
+    BENCH_calib.json gates on) plus the tok/s comparison on the same
+    event-time basis (token count over summed measured segment walls,
+    so the comparison excludes host think-time between steps)."""
+    walls = [e.wall_us for e in events if e.entry_point == "serve.decode_step"]
+    pre = [e.wall_us for e in events if e.entry_point == "serve.prefill"]
+    if not walls:
+        raise ValueError("no measured serve.decode_step events to compare")
+    meas_p50 = float(np.percentile(walls, 50))
+    meas_p99 = float(np.percentile(walls, 99))
+    meas_total_us = float(sum(walls) + sum(pre))
+    tokens = int(predicted["tokens"])
+    pred_p50 = float(predicted["p50_step_us"])
+    return {
+        "measured_steps": len(walls),
+        "measured_p50_us": round(meas_p50, 2),
+        "measured_p99_us": round(meas_p99, 2),
+        "predicted_p50_us": round(pred_p50, 2),
+        "predicted_p99_us": float(predicted["p99_step_us"]),
+        "measured_tok_s": round(tokens / max(meas_total_us * 1e-6, 1e-12), 2),
+        "predicted_tok_s": float(predicted["tok_s"]),
+        "p50_error_pct": round(
+            100.0 * abs(pred_p50 - meas_p50) / max(meas_p50, 1e-9), 2),
+    }

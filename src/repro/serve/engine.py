@@ -254,10 +254,32 @@ class ContinuousBatcher:
         prepare_weights: bool = False,
         mesh=None,
         compress_tp: bool = False,
+        profile=None,
     ):
         self.packed = None
         self.mesh = mesh
         self._compress_tp = bool(compress_tp)
+        # opt-in measured-time observability (DESIGN.md §11): `profile`
+        # is a repro.profile.Profiler, or a path to stream JSON-lines
+        # events to, or None (the default — the step builders then get
+        # the *unwrapped* jitted functions back from wrap_step, so the
+        # disabled engine is bit- and jaxpr-identical to one built
+        # before this feature existed).
+        self.profiler = None
+        self._owns_profiler = False
+        if profile is not None:
+            from repro.profile.trace import Profiler
+
+            if isinstance(profile, Profiler):
+                self.profiler = profile
+            else:
+                self.profiler = Profiler(profile)
+                self._owns_profiler = True
+        self._mesh_dict = (
+            {str(k): int(v) for k, v in mesh.shape.items()}
+            if mesh is not None else None
+        )
+        self._prefill_meta = {}
         if mesh is not None:
             from repro.dist import sharding as shd  # placement, below
 
@@ -282,7 +304,17 @@ class ContinuousBatcher:
             # prepare_for_spec(mesh=...) owns placement of BOTH surgery
             # outputs (folded params under param_specs, planes under
             # packed_specs) — don't re-place the params below
-            prepared = prepare_for_spec(params, exec_spec, mesh=mesh)
+            def _prepare():
+                return prepare_for_spec(params, exec_spec, mesh=mesh)
+
+            if self.profiler is not None:
+                from repro.profile.trace import wrap_step
+
+                _prepare = wrap_step(
+                    _prepare, self.profiler, "serve.prepare",
+                    exec_spec=exec_spec.name, shape_class="prepare",
+                    mesh=self._mesh_dict)
+            prepared = _prepare()
             params_placed = mesh is not None
             if exec_spec.packing == "bitplane_u8":
                 params, self.packed = prepared
@@ -360,7 +392,8 @@ class ContinuousBatcher:
         the module-level :func:`sample`, traced into the jitted step."""
         return sample(last_logits[:, None, :], key, self.temperature)[:, 0]
 
-    def _jit_step(self, f, donate):
+    def _jit_step(self, f, donate, entry_point=None, shape_class="decode",
+                  meta_fn=None):
         """jit with the TP output shardings pinned: sampled tokens
         replicated (they are THE one host fetch of the step), caches kept
         under their cache_specs sharding so the donated-buffer layout is
@@ -370,7 +403,11 @@ class ContinuousBatcher:
         batcher's mesh via the dist.sharding TP-mesh switch — installed
         around the call (where tracing happens) and restored after, so
         two batchers on different meshes in one process never read each
-        other's mesh and nothing leaks once the batcher is done."""
+        other's mesh and nothing leaks once the batcher is done.
+
+        With a profiler installed and ``entry_point`` named, the built
+        step is wrapped with wall-time capture (repro.profile.trace);
+        with no profiler ``wrap_step`` returns it unchanged."""
         if self._cache_ns is None:
             jitted = jax.jit(f, donate_argnums=donate)
         else:
@@ -379,23 +416,49 @@ class ContinuousBatcher:
             tok_ns = NamedSharding(self.mesh, P())
             jitted = jax.jit(f, donate_argnums=donate,
                              out_shardings=(tok_ns, self._cache_ns))
-        if not self._compress_tp:
+        if self._compress_tp:
+            inner = jitted
+
+            def scoped(*args):
+                from repro.dist import sharding as shd
+
+                prev = shd.tp_mesh()
+                shd.set_tp_mesh(self.mesh)
+                try:
+                    return inner(*args)
+                finally:
+                    shd.set_tp_mesh(prev)
+
+            jitted = scoped
+        if self.profiler is None or entry_point is None:
             return jitted
+        from repro.profile.trace import wrap_step
 
-        def scoped(*args):
-            from repro.dist import sharding as shd
+        return wrap_step(
+            jitted, self.profiler, entry_point,
+            exec_spec=self._spec_tag, shape_class=shape_class,
+            mesh=self._mesh_dict, meta_fn=meta_fn)
 
-            prev = shd.tp_mesh()
-            shd.set_tp_mesh(self.mesh)
-            try:
-                return jitted(*args)
-            finally:
-                shd.set_tp_mesh(prev)
-
-        return scoped
+    @property
+    def _spec_tag(self) -> str:
+        spec = self.cfg.quant.exec_spec
+        return spec.name if spec is not None else f"mode:{self.cfg.quant.mode}"
 
     def _build_decode_fused(self):
-        return self._jit_step(fused_decode_fn(self.cfg, self.temperature), (2,))
+        def meta(*_args):
+            # called at record time, BEFORE _step_fused mutates slots —
+            # occupancy is the number of rows this step decoded for
+            return {
+                "arch": self.cfg.name,
+                "step": self._step_idx,
+                "occupancy": sum(r is not None for r in self.slot_req),
+                "n_slots": self.n_slots,
+            }
+
+        return self._jit_step(
+            fused_decode_fn(self.cfg, self.temperature), (2,),
+            entry_point="serve.decode_step", shape_class="decode",
+            meta_fn=meta)
 
     def _build_prefill_fused(self):
         cfg, n, s_max = self.cfg, self.n_slots, self.s_max
@@ -417,7 +480,14 @@ class ContinuousBatcher:
 
             return toks, jax.tree.map(merge, caches, new)
 
-        return self._jit_step(pf, (1,))
+        def meta(*_args):
+            # _fill_slots_fused stages the batch description here right
+            # before invoking the step (replay.requests_from_trace
+            # reconstructs the request mix from these events)
+            return dict(self._prefill_meta)
+
+        return self._jit_step(pf, (1,), entry_point="serve.prefill",
+                              shape_class="prefill", meta_fn=meta)
 
     def _fill_slots_fused(self):
         newly = []
@@ -445,6 +515,17 @@ class ContinuousBatcher:
         # decode steps draw even fold_in streams, prefill batches odd ones
         key = jax.random.fold_in(self._key, 2 * self._prefill_idx + 1)
         self._prefill_idx += 1
+        if self.profiler is not None:
+            self._prefill_meta = {
+                "arch": self.cfg.name,
+                "prompts": [
+                    (self.slot_req[s].rid, len(self.slot_req[s].prompt),
+                     self.slot_req[s].max_new)
+                    for s in newly
+                ],
+                "s_pad": s_pad,
+                "filled": len(newly),
+            }
         toks, self.caches = self._prefill(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(start),
             jnp.asarray(fill), key)
@@ -602,8 +683,15 @@ class ContinuousBatcher:
         return {"decode_steps": self.decode_steps, "host_syncs": self.host_syncs}
 
     def run(self) -> None:
-        while self.queue or any(r is not None for r in self.slot_req):
-            self.step()
+        try:
+            while self.queue or any(r is not None for r in self.slot_req):
+                self.step()
+        finally:
+            if self._owns_profiler and self.profiler is not None:
+                # the batcher opened the trace file (profile=<path>), so
+                # it releases the handle; events stay readable mid-run
+                # because the profiler flushes per event
+                self.profiler.close()
 
 
 # ---------------------------------------------------------------------------

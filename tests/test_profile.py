@@ -1,0 +1,457 @@
+"""profile → calibrate → replay (repro.profile, DESIGN.md §11).
+
+Pins, in order: the trace event schema round-trip; the execution shim's
+profiler sink (eager calls timed, traced calls never); the engine's
+step instrumentation (events + request reconstruction) and its
+zero-cost-when-disabled guarantee (bit-identical tokens AND
+jaxpr-identical step, via the registered tracing contract); the
+least-squares fit recovering synthetic cost parameters; the replay
+simulator's step accounting and its predicted-vs-measured error bound
+on a real smoke serve run; and the fitted table's consumption by
+``execution.autotune(calibration=)`` / ``hw.project(calibration=)``.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.profile as P
+from repro.core import execution as X
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.serve.engine import ContinuousBatcher, Request
+
+
+def _event(entry="execution.execute", spec="exact/jnp/none", cls="decode",
+           wall=100.0, **meta):
+    return P.TraceEvent(entry_point=entry, exec_spec=spec, shape_class=cls,
+                        mesh=None, wall_us=wall, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Trace schema
+# ---------------------------------------------------------------------------
+
+
+class TestTraceSchema:
+    def test_round_trip(self):
+        ev = P.TraceEvent("serve.decode_step", "mode:off", "decode",
+                          {"model": 4}, 812.4, 101.2, {"occupancy": 2})
+        d = ev.to_json()
+        assert d["v"] == P.TRACE_SCHEMA_VERSION
+        P.validate_event(d)
+        assert P.event_from_json(d) == ev
+        # through an actual JSON string (what the trace file holds)
+        assert P.event_from_json(json.loads(json.dumps(d))) == ev
+
+    def test_file_round_trip(self, tmp_path):
+        path = tmp_path / "trace.jsonl"
+        with P.Profiler(path) as prof:
+            prof.record(_event(wall=1.0, m=1, k=2, n=3))
+            prof.record(_event(entry="serve.prefill", cls="prefill", wall=2.0))
+        events = P.read_trace(path)
+        assert events == prof.events
+        assert len(events) == 2
+
+    @pytest.mark.parametrize("mutate", [
+        lambda d: d.pop("v"),
+        lambda d: d.update(v=99),
+        lambda d: d.pop("wall_us"),
+        lambda d: d.update(wall_us=-1.0),
+        lambda d: d.update(entry_point=""),
+        lambda d: d.update(mesh="tp4"),
+    ])
+    def test_rejects_malformed(self, mutate):
+        d = _event().to_json()
+        mutate(d)
+        with pytest.raises(ValueError):
+            P.validate_event(d)
+
+    def test_required_fields_are_the_issue_contract(self):
+        # (entry_point, exec_spec, shape_class, mesh, wall_us) is the
+        # recorded tuple the observability layer promises
+        for f in ("entry_point", "exec_spec", "shape_class", "mesh", "wall_us"):
+            assert f in P.trace.REQUIRED_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# Execution-shim sink
+# ---------------------------------------------------------------------------
+
+
+class TestKernelSink:
+    def setup_method(self):
+        self.spec = X.CiMExecSpec(formulation="exact", backend="jnp")
+        k = jax.random.PRNGKey(0)
+        self.x = jnp.sign(jax.random.normal(k, (4, 64))).astype(jnp.float32)
+        self.w = jnp.sign(jax.random.normal(k, (64, 32))).astype(jnp.float32)
+
+    def test_eager_execute_records(self):
+        prof = P.Profiler()
+        prev = P.set_profiler(prof)
+        try:
+            X.execute(self.spec, self.x, self.w)
+        finally:
+            P.set_profiler(prev)
+        (e,) = prof.events
+        assert e.entry_point == "execution.execute"
+        assert e.exec_spec == "exact/jnp/none"
+        assert e.shape_class == "decode"
+        assert e.meta["macs"] == 4 * 64 * 32
+        assert e.wall_us > 0 and e.dispatch_us <= e.wall_us
+
+    def test_traced_execute_never_records(self):
+        prof = P.Profiler()
+        prev = P.set_profiler(prof)
+        try:
+            jax.jit(lambda a, b: X.execute(self.spec, a, b))(self.x, self.w)
+        finally:
+            P.set_profiler(prev)
+        assert prof.events == []
+
+    def test_uninstall_restores_previous(self):
+        assert P.current_profiler() is None
+        p1, p2 = P.Profiler(), P.Profiler()
+        assert P.set_profiler(p1) is None
+        assert P.set_profiler(p2) is p1
+        assert P.set_profiler(None) is p2
+        assert P.current_profiler() is None
+
+
+# ---------------------------------------------------------------------------
+# Engine instrumentation
+# ---------------------------------------------------------------------------
+
+
+def _serve(cfg, params, profile=None, seed=0, n=5):
+    b = ContinuousBatcher(params, cfg, n_slots=3, s_max=32, seed=seed,
+                          profile=profile)
+    reqs = [Request(i, [1 + i % 7] * (1 + i % 3), max_new=2 + i % 3)
+            for i in range(n)]
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    return b, reqs
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("smollm-135m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestEngineInstrumentation:
+    def test_profiled_run_emits_schema_events(self, smoke_setup, tmp_path):
+        cfg, params = smoke_setup
+        path = tmp_path / "serve.jsonl"
+        _serve(cfg, params, profile=str(path))
+        events = P.read_trace(path)  # validates every line
+        kinds = {e.entry_point for e in events}
+        assert {"serve.prefill", "serve.decode_step"} <= kinds
+        decode = [e for e in events if e.entry_point == "serve.decode_step"]
+        assert all(e.shape_class == "decode" for e in decode)
+        assert all(e.meta["occupancy"] >= 1 for e in decode)
+        assert all(e.meta["arch"] == cfg.name for e in decode)
+
+    def test_requests_reconstructed_from_trace(self, smoke_setup):
+        cfg, params = smoke_setup
+        prof = P.Profiler()
+        _, reqs = _serve(cfg, params, profile=prof)
+        got = P.requests_from_trace(prof.events)
+        assert [(r.rid, r.prompt_len, r.max_new) for r in got] == \
+            [(r.rid, len(r.prompt), r.max_new) for r in reqs]
+
+    def test_disabled_profiler_bit_identical(self, smoke_setup):
+        cfg, params = smoke_setup
+        _, plain = _serve(cfg, params, profile=None, seed=3)
+        _, prof = _serve(cfg, params, profile=P.Profiler(), seed=3)
+        assert [r.generated for r in plain] == [r.generated for r in prof]
+
+    def test_disabled_wrap_is_the_same_object(self):
+        def step(x):
+            return x
+
+        assert P.wrap_step(step, None, "serve.decode_step") is step
+
+    def test_disabled_step_jaxpr_identical(self):
+        # the registered contract traces the production fused decode fn
+        # raw and through the disabled wrapper and requires ONE equation
+        # count — plus zero host callbacks in the step
+        from repro.analysis import run_contract
+
+        findings, meta = run_contract("profile.step_instrumentation.disabled")
+        assert findings == [], [f.message for f in findings]
+        assert len(set(meta["eqn_counts"].values())) == 1
+
+
+# ---------------------------------------------------------------------------
+# Calibration fit
+# ---------------------------------------------------------------------------
+
+
+class TestCalibrationFit:
+    def _synthetic_events(self, fixed=50.0, per_mmac=3.0, per_mb=8.0,
+                          bpw=2.0, cls="decode"):
+        shapes = [(1, 256, 256), (4, 256, 512), (8, 512, 256),
+                  (2, 512, 512), (6, 128, 1024)]
+        return [
+            _event(cls=cls,
+                   wall=fixed + per_mmac * (m * k * n) * 1e-6
+                   + per_mb * (k * n * bpw) * 1e-6,
+                   m=m, k=k, n=n, macs=m * k * n,
+                   weight_bytes=int(k * n * bpw))
+            for m, k, n in shapes
+        ]
+
+    def test_fit_recovers_synthetic_params(self):
+        fit = P.fit_kernel(self._synthetic_events())
+        assert fit.fixed_us == pytest.approx(50.0, rel=1e-3)
+        assert fit.us_per_mmac == pytest.approx(3.0, rel=1e-3)
+        assert fit.us_per_mb == pytest.approx(8.0, rel=1e-3)
+        assert fit.bytes_per_weight == pytest.approx(2.0)
+        assert fit.residual_pct < 0.1
+        # and the model predicts a held-out shape
+        assert fit.predict_us(3, 384, 384) == pytest.approx(
+            50.0 + 3.0 * 3 * 384 * 384 * 1e-6 + 8.0 * 384 * 384 * 2 * 1e-6,
+            rel=1e-3)
+
+    def test_fit_clamps_rates_nonnegative(self):
+        # constant walls regardless of size: rates must go to ~0, never
+        # negative (clamp-and-refit NNLS)
+        events = [_event(wall=100.0, m=m, k=k, n=n)
+                  for m, k, n in [(1, 64, 64), (8, 512, 512), (4, 256, 128)]]
+        fit = P.fit_kernel(events)
+        assert fit.us_per_mmac >= 0 and fit.us_per_mb >= 0
+        assert fit.fixed_us == pytest.approx(100.0, rel=1e-3)
+
+    def test_calibrate_groups_and_round_trips(self, tmp_path):
+        events = (self._synthetic_events(cls="decode")
+                  + self._synthetic_events(fixed=20.0, cls="prefill"))
+        table = P.calibrate(events, backend="cpu",
+                            tile_winners={"blocked/pallas/bitplane_u8":
+                                          {"decode": (8, 256, 128)}})
+        assert set(table.kernels) == {"exact/jnp/none|decode",
+                                      "exact/jnp/none|prefill"}
+        path = tmp_path / "calib.json"
+        table.save(path)
+        again = P.CalibrationTable.load(path)
+        assert again == table
+
+    def test_load_rejects_wrong_version(self, tmp_path):
+        table = P.calibrate(self._synthetic_events(), backend="cpu")
+        d = table.to_json()
+        d["version"] = 99
+        with pytest.raises(ValueError, match="version"):
+            P.CalibrationTable.from_json(d)
+
+    def test_decode_boundary_matches_execution(self):
+        # the table dispatches on M like the execution API; a drifted
+        # copy of the boundary would silently mis-class predictions
+        # (sys.modules: the package re-exports the calibrate *function*,
+        # which shadows the submodule as an attribute)
+        import sys
+
+        C = sys.modules["repro.profile.calibrate"]
+        assert C.DECODE_M_MAX == X.DECODE_M_MAX
+
+    def test_engine_fit_subtracts_kernel_share(self):
+        decode = [P.TraceEvent("serve.decode_step", "mode:off", "decode",
+                               None, 1000.0, 0.0,
+                               {"arch": "a1", "occupancy": occ})
+                  for occ in (1, 2, 4)]
+        fits = P.fit_engines(decode, kernel_model=lambda a, occ: 100.0 * occ)
+        fit = fits["a1|tp1"]
+        assert fit.decode_fixed_us == pytest.approx(1000.0 - 200.0)
+        assert fit.n_decode == 3
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+
+
+class TestReplay:
+    def _table(self, decode_fixed=1000.0, prefill=2000.0, arch="smollm-135m"):
+        return P.CalibrationTable(
+            version=P.CALIBRATION_VERSION, backend="cpu",
+            default_spec="exact/jnp/none",
+            kernels={"exact/jnp/none|decode":
+                     P.KernelFit(10.0, 1.0, 1.0, 2.0, 5, 0.5)},
+            engines={f"{arch}|tp1": P.EngineFit(
+                arch, "tp1", "mode:off", decode_fixed, prefill, 10, 3, 1.0)},
+        )
+
+    def test_step_accounting_matches_engine(self, smoke_setup):
+        """The simulator predicts the EXACT decode-step / prefill-batch
+        counts the real engine runs for the same workload."""
+        cfg, params = smoke_setup
+        prof = P.Profiler()
+        b, _ = _serve(cfg, params, profile=prof)
+        reqs = P.requests_from_trace(prof.events)
+        pred = P.simulate(self._table(), "smollm-135m", reqs,
+                          n_slots=3, s_max=32)
+        assert pred["decode_steps"] == b.decode_steps
+        assert pred["prefill_batches"] == sum(
+            1 for e in prof.events if e.entry_point == "serve.prefill")
+        assert pred["tokens"] == sum(
+            1 for e in prof.events if e.entry_point == "serve.decode_step"
+            for _ in range(e.meta["occupancy"])) + sum(
+            e.meta["filled"] for e in prof.events
+            if e.entry_point == "serve.prefill")
+
+    def test_dependency_graph_is_a_chain(self):
+        reqs = P.requests_like_bench(64, 4, 3)
+        pred = P.simulate(self._table(), "smollm-135m", reqs)
+        graph = pred["graph"]
+        assert list(graph[0]["deps"]) == []
+        for prev, node in zip(graph, graph[1:]):
+            assert list(node["deps"]) == [prev["nid"]]
+            assert node["start_us"] == pytest.approx(
+                prev["start_us"] + prev["us"])
+
+    def test_replay_error_bound_on_smoke_arch(self, smoke_setup):
+        """End-to-end: profile a smoke serve run, calibrate on it,
+        replay the same workload — the predicted decode-step p50 must
+        land within 50% of the measured p50 (loose: shared CI hosts),
+        and the step counts must match exactly."""
+        cfg, params = smoke_setup
+        prof = P.Profiler()
+        b, _ = _serve(cfg, params, profile=prof, n=6)
+        table = P.calibrate(prof.events, backend=jax.default_backend())
+        reqs = P.requests_from_trace(prof.events)
+        pred = P.simulate(table, cfg.name, reqs, n_slots=3, s_max=32)
+        cmp = P.compare_to_measured(pred, prof.events)
+        assert cmp["measured_steps"] == pred["decode_steps"]
+        assert cmp["p50_error_pct"] <= 50.0, cmp
+
+    def test_predict_decode_step_with_kernel_model(self):
+        table = self._table(decode_fixed=500.0)
+        us = P.predict_decode_step_us(table, "smollm-135m", 4,
+                                      kernel_model=lambda a, occ: 10.0 * occ)
+        assert us == pytest.approx(540.0)
+
+
+# ---------------------------------------------------------------------------
+# Downstream consumption (autotune / hw.project)
+# ---------------------------------------------------------------------------
+
+
+class TestCalibrationConsumers:
+    def _pallas_spec(self):
+        spec = X.CiMExecSpec(formulation="blocked", backend="pallas",
+                             packing="bitplane_u8").resolve()
+        try:
+            entry = X.get_backend(spec)
+        except KeyError:
+            pytest.skip("no pallas packed backend registered")
+        if entry.tiles is None:
+            pytest.skip("packed backend has no tile table")
+        return spec
+
+    def test_autotune_installs_calibrated_winners(self):
+        spec = self._pallas_spec()
+        decode_tiles = tuple(X.tiles_for(spec, 4, 1024, 512))
+        table = P.CalibrationTable(
+            version=P.CALIBRATION_VERSION, backend="cpu",
+            default_spec=spec.name, kernels={},
+            tile_winners={spec.name: {"decode": decode_tiles}})
+        X.clear_tile_cache()
+        try:
+            report = X.autotune(spec, calibration=table)
+            assert report["decode"]["tiles"] == decode_tiles
+            assert report["decode"]["source"] == "calibration"
+            assert tuple(X.tiles_for(spec, 2, 1024, 512)) == decode_tiles
+        finally:
+            X.clear_tile_cache()
+
+    def test_autotune_rejects_invalid_calibrated_tiles(self):
+        spec = self._pallas_spec()
+        bad = P.CalibrationTable(
+            version=P.CALIBRATION_VERSION, backend="cpu",
+            default_spec=spec.name, kernels={},
+            tile_winners={spec.name: {"decode": (4, 3, 7)}})
+        with pytest.raises(ValueError, match="invalid"):
+            X.autotune(spec, calibration=bad)
+
+    def test_autotune_rejects_unknown_spec_in_table(self):
+        spec = self._pallas_spec()
+        empty = P.CalibrationTable(
+            version=P.CALIBRATION_VERSION, backend="cpu",
+            default_spec=spec.name, kernels={}, tile_winners={})
+        with pytest.raises(ValueError, match="no tile winners"):
+            X.autotune(spec, calibration=empty)
+
+    def test_project_accepts_fitted_table(self):
+        from repro import hw
+
+        table = P.CalibrationTable(
+            version=P.CALIBRATION_VERSION, backend="cpu",
+            default_spec="exact/jnp/none",
+            kernels={"exact/jnp/none|decode":
+                     P.KernelFit(10.0, 2.0, 1.0, 2.0, 9, 1.0),
+                     "exact/jnp/none|prefill":
+                     P.KernelFit(50.0, 1.0, 1.0, 2.0, 9, 1.0)})
+        arr = hw.ArraySpec()
+        base = hw.project("smollm-135m", "decode_32k", arr)
+        assert base["calibrated"] is None
+        p = hw.project("smollm-135m", "decode_32k", arr, calibration=table)
+        cal = p["calibrated"]
+        assert cal["source"]["version"] == P.CALIBRATION_VERSION
+        assert cal["source"]["backend"] == "cpu"
+        assert cal["time_us"] > 0 and cal["tok_s"] > 0
+        assert cal["cim_speedup_vs_host"] > 0
+        # analytic projection itself unchanged by the calibration arg
+        assert p["tok_s"] == base["tok_s"]
+
+
+# ---------------------------------------------------------------------------
+# Benchmark validator
+# ---------------------------------------------------------------------------
+
+
+class TestBenchValidator:
+    def _result(self):
+        import sys
+        from pathlib import Path
+
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+        from benchmarks.bench_calibrate import validate_result
+
+        events = [_event(wall=100.0 + m, m=m, k=256, n=256)
+                  for m in (1, 4, 8)]
+        engine = [P.TraceEvent("serve.decode_step", "mode:off", "decode",
+                               None, 1000.0, 0.0,
+                               {"arch": "a1", "occupancy": 2})] * 3
+        table = P.calibrate(events + engine, backend="cpu")
+        return validate_result, {
+            "bench": "calibrate", "smoke": True, "backend": "cpu",
+            "error_bound_pct": 40.0,
+            "kernel_sweep": {"specs": ["exact/jnp/none"], "repeats": 3,
+                             "n_events": 3},
+            "fit_residuals": {"kernels": {}, "engines": {}},
+            "table": table.to_json(),
+            "replay": {"a1": {"predicted_p50_us": 1000.0,
+                              "measured_p50_us": 1000.0,
+                              "p50_error_pct": 0.0, "within_bound": True}},
+            "validated": True,
+        }
+
+    def test_accepts_well_formed(self):
+        validate, d = self._result()
+        validate(d)
+
+    def test_rejects_unvalidated_and_inconsistent(self):
+        validate, d = self._result()
+        bad = dict(d, validated=False)
+        bad["replay"] = {"a1": dict(d["replay"]["a1"], within_bound=False,
+                                    p50_error_pct=90.0)}
+        with pytest.raises(ValueError, match="exceeded"):
+            validate(bad)
+        for field in ("table", "replay", "validated"):
+            broken = {k: v for k, v in d.items() if k != field}
+            with pytest.raises(ValueError, match="missing"):
+                validate(broken)
