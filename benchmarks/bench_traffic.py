@@ -1,0 +1,335 @@
+"""Poisson traffic benchmark for the async serving front door.
+
+Drives open-loop Poisson arrivals (``repro.profile.replay.
+poisson_requests`` — the same arrival model ``replay.simulate``
+consumes) through the REAL serving stack: TCP sockets, the HTTP→
+WebSocket upgrade, per-token streaming, the replica router, and the
+fused continuous-batching engine underneath. Nothing is shortcut
+in-process — every request is a masked-client-frame WebSocket stream
+against a live ``FrontDoor`` listener.
+
+Reported per replica count (1 and 2):
+
+  * ``goodput_tok_s``    — delivered tokens / wall second over the
+    measured window (client-side clock, first arrival → last done);
+  * ``ttft_us``          — p50/p99/mean time-to-first-token;
+  * ``tok_latency_us``   — p50/p99/mean inter-token gap (decode cadence
+    as a streaming client observes it);
+  * ``queue_wait_us``    — admission → engine slot;
+  * engine counters      — decode_steps / host_syncs / prefill_batches
+    summed over replicas, plus ``host_syncs_match_fused``: the fused
+    engine's one-host-fetch-per-step discipline (DESIGN.md §6,
+    BENCH_serve.json's fused row) must survive the async front door
+    unchanged — ``host_syncs == decode_steps + prefill_batches``
+    exactly, per replica.
+
+The headline gate: at a saturating arrival rate, 2-replica goodput must
+beat 1-replica (``goodput_2r_gt_1r``) — replication across the router
+actually buys throughput, it doesn't just shard the same queue.
+
+**Modeled device pacing** (``--pace-us``, default 5000): each replica's
+worker thread sleeps the modeled per-step device latency after every
+real engine step, with the GIL released — the way accelerator compute
+occupies a device without occupying the host. This is the same
+functional-on-CPU / modeled-time split the rest of the repo uses
+(hw.project, profile→calibrate→replay): on a CPU host every replica's
+*functional* step shares the same cores, so raw wall time measures one
+CPU no matter how many replicas exist; against the modeled device time,
+replicas overlap exactly as independent CiM arrays would, and the
+router's scaling behavior becomes measurable. The pacing lives in the
+worker thread AROUND the jitted step — never inside it — so the traced
+program, the host-sync counts, and every engine invariant are the
+production ones (``host_syncs_match_fused`` checks this per row).
+
+A warmup pass per configuration (every prefill bucket on every replica,
+plus decode) runs before the measured window, and engine counters +
+SLO aggregates are reset after it: compile time lands nowhere in the
+SLOs, matching bench_serve's steady-state discipline.
+
+Emits ``BENCH_traffic.json`` (CI validates it with
+:func:`validate_result` and uploads it as a workflow artifact).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_traffic [--smoke|--full]
+        [--rate RPS] [--requests N] [--replicas-max K] [--out PATH]
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.launch._boot import force_host_devices_for_tp
+
+force_host_devices_for_tp(sys.argv)  # before the jax import below
+
+import argparse
+import asyncio
+import json
+import time
+from typing import Any, Dict, List
+
+import jax
+
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.profile.replay import ReplayRequest, poisson_requests
+from repro.serve.frontdoor.client import WSClient, http_json
+
+
+def _prompt_for(rid: int, prompt_len: int, vocab: int) -> List[int]:
+    """Deterministic prompt tokens (same recipe as bench_serve's
+    workload, parameterized by the Poisson request's rid/len)."""
+    return [1 + (rid * 7 + j) % (vocab - 1) for j in range(prompt_len)]
+
+
+async def _warmup(door) -> None:
+    """Compile every jitted entry point before the measured window: one
+    request per pow2 prefill bucket (prompt lens 1/2/4) on EACH replica
+    (least-loaded dispatch spreads consecutive submissions), each
+    decoding 2 tokens."""
+    tracked = []
+    for _ in door.router.workers:
+        for plen in (1, 2, 4):
+            tracked.append(door.router.submit(list(range(1, plen + 1)), 2))
+    for t in tracked:
+        while True:
+            kind, _ = await t.stream.get()
+            if kind != "token":
+                break
+        door.router.forget(t.req.rid)
+
+
+async def _drive_one(host: str, port: int, r: ReplayRequest, vocab: int,
+                     t0: float) -> Dict[str, Any]:
+    """One open-loop client: sleep until the request's Poisson arrival,
+    then stream it over its own WebSocket connection."""
+    delay = r.arrival_us * 1e-6 - (time.perf_counter() - t0)
+    if delay > 0:
+        await asyncio.sleep(delay)
+    ws = await WSClient.connect(host, port)
+    try:
+        res = await ws.generate(
+            _prompt_for(r.rid, r.prompt_len, vocab), r.max_new)
+        return {"rid": r.rid, "tokens": res["tokens"], "done": res["done"]}
+    except RuntimeError as e:  # admission control said no (queue_full)
+        return {"rid": r.rid, "tokens": [],
+                "rejected": getattr(e, "payload", {"error": str(e)})}
+    finally:
+        await ws.close()
+
+
+async def _bench_replicas(params, cfg, *, replicas: int, tp: int,
+                          rate_rps: float, n_requests: int, n_slots: int,
+                          s_max: int, queue_limit: int, seed: int,
+                          max_new: int, pace_us: float = 0.0) -> Dict[str, Any]:
+    """Serve one Poisson workload through a fresh front door with
+    ``replicas`` engines; return the artifact row."""
+    from repro.launch.serve import build_frontdoor
+
+    args = argparse.Namespace(
+        replicas=replicas, tp=tp, profile=None, slots=n_slots, s_max=s_max,
+        exec_spec=None, temperature=0.0, seed=seed, loop_decode=False,
+        prepare_weights=False, compress_tp=False, queue_limit=queue_limit,
+        host="127.0.0.1", port=0, pace_us=pace_us)
+    door, _ = build_frontdoor(args, cfg, params, None)
+    await door.start()
+    try:
+        await _warmup(door)
+        for w in door.router.workers:
+            b = w.batcher
+            b.decode_steps = b.host_syncs = b.prefill_batches = 0
+        door.tracker.reset()
+
+        reqs = poisson_requests(rate_rps, seed=seed, n_requests=n_requests,
+                                prompt_len_max=4, max_new=max_new)
+        t0 = time.perf_counter()
+        results = await asyncio.gather(*[
+            _drive_one(door.host, door.port, r, cfg.vocab, t0) for r in reqs])
+        wall = time.perf_counter() - t0
+        status, stats = await http_json(door.host, door.port, "GET", "/stats")
+        assert status == 200, status
+    finally:
+        await door.stop()
+
+    served = [r for r in results if "rejected" not in r]
+    tokens_client = sum(len(r["tokens"]) for r in served)
+    slo = stats["slo"]
+    eng = {"decode_steps": 0, "host_syncs": 0, "prefill_batches": 0}
+    fused_ok = True
+    for rep in stats["router"]["replicas"]:
+        for k in eng:
+            eng[k] += rep[k]
+        # the fused-engine discipline, per replica: exactly one host
+        # fetch per decode step + one per batched prefill, nothing from
+        # the async layer
+        fused_ok &= rep["host_syncs"] == (
+            rep["decode_steps"] + rep["prefill_batches"])
+    return {
+        "replicas": replicas,
+        "rate_rps": rate_rps,
+        "step_pace_us": pace_us,
+        "n_requests": n_requests,
+        "served": len(served),
+        "rejected": slo["requests"]["rejected"],
+        "tokens_out": tokens_client,
+        "tokens_server": slo["tokens_out"],
+        "wall_s": round(wall, 4),
+        "goodput_tok_s": round(tokens_client / max(wall, 1e-9), 2),
+        "ttft_us": slo["slo_us"]["ttft"],
+        "tok_latency_us": slo["slo_us"]["tok_latency"],
+        "queue_wait_us": slo["slo_us"]["queue_wait"],
+        "e2e_us": slo["slo_us"]["e2e"],
+        **eng,
+        "host_syncs_per_token": round(
+            eng["host_syncs"] / max(tokens_client, 1), 3),
+        "host_syncs_match_fused": bool(fused_ok),
+    }
+
+
+def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
+        s_max: int = 64, rate_rps: float = 300.0, n_requests: int = 32,
+        max_new: int = 8, replicas_max: int = 2, tp: int = 1,
+        queue_limit: int = 0, seed: int = 0, pace_us: float = 5000.0,
+        out: str = "BENCH_traffic.json") -> Dict[str, Any]:
+    cfg = get_config(arch, smoke=smoke)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    # generous default cap: the bench measures goodput under saturation,
+    # not rejection behavior (tests/test_frontdoor.py pins the 429 path)
+    queue_limit = queue_limit or max(n_requests + 8, 16)
+    rows: Dict[str, Any] = {}
+    for replicas in range(1, replicas_max + 1):
+        rows[str(replicas)] = asyncio.run(_bench_replicas(
+            params, cfg, replicas=replicas, tp=tp, rate_rps=rate_rps,
+            n_requests=n_requests, n_slots=n_slots, s_max=s_max,
+            queue_limit=queue_limit, seed=seed, max_new=max_new,
+            pace_us=pace_us))
+    g1 = rows["1"]["goodput_tok_s"]
+    g2 = rows[str(replicas_max)]["goodput_tok_s"] if replicas_max > 1 else g1
+    tokens_agree = all(
+        r["tokens_out"] == r["tokens_server"] for r in rows.values())
+    fused_ok = all(r["host_syncs_match_fused"] for r in rows.values())
+    result = {
+        "bench": "traffic",
+        "arch": arch,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "n_slots": n_slots,
+        "s_max": s_max,
+        "queue_limit": queue_limit,
+        "rate_rps": rate_rps,
+        "step_pace_us": pace_us,
+        "seed": seed,
+        "n_requests": n_requests,
+        "rows": rows,
+        "tokens_client_eq_server": tokens_agree,
+        "goodput_2r_gt_1r": bool(replicas_max > 1 and g2 > g1),
+        "validated": bool(
+            tokens_agree and fused_ok
+            and (replicas_max == 1 or g2 > g1)),
+    }
+    validate_result(result)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"[bench_traffic] wrote {out}")
+    return result
+
+
+_ROW_FIELDS = (
+    "replicas", "rate_rps", "step_pace_us", "n_requests", "served",
+    "rejected", "tokens_out",
+    "tokens_server", "wall_s", "goodput_tok_s", "ttft_us", "tok_latency_us",
+    "queue_wait_us", "e2e_us", "decode_steps", "host_syncs",
+    "prefill_batches", "host_syncs_per_token", "host_syncs_match_fused",
+)
+
+
+def validate_result(d) -> None:
+    """Schema gate for BENCH_traffic.json (CI runs this on fresh smoke
+    output AND the committed artifact). Raises ValueError on any
+    malformation, on a broken fused host-sync discipline, and on an
+    unvalidated run — a traffic artifact where adding a replica did not
+    add goodput must not ship."""
+    for field in ("bench", "arch", "smoke", "backend", "n_slots", "s_max",
+                  "queue_limit", "rate_rps", "step_pace_us", "seed",
+                  "n_requests", "rows", "tokens_client_eq_server",
+                  "goodput_2r_gt_1r", "validated"):
+        if field not in d:
+            raise ValueError(f"BENCH_traffic.json missing field {field!r}")
+    if d["bench"] != "traffic":
+        raise ValueError(f"bench field is {d['bench']!r}, not 'traffic'")
+    rows = d["rows"]
+    if "1" not in rows:
+        raise ValueError("no 1-replica row")
+    for key, row in rows.items():
+        for field in _ROW_FIELDS:
+            if field not in row:
+                raise ValueError(f"rows[{key!r}] missing {field!r}")
+        for pct in ("ttft_us", "tok_latency_us", "queue_wait_us", "e2e_us"):
+            for stat in ("p50", "p99", "mean", "n"):
+                if stat not in row[pct]:
+                    raise ValueError(f"rows[{key!r}][{pct!r}] missing {stat!r}")
+        if row["tokens_out"] <= 0:
+            raise ValueError(f"rows[{key!r}] served no tokens")
+        if not row["host_syncs_match_fused"]:
+            raise ValueError(
+                f"rows[{key!r}]: host_syncs != decode_steps + "
+                "prefill_batches — the async front door broke the fused "
+                "engine's one-host-fetch-per-step discipline")
+    if not d["tokens_client_eq_server"]:
+        raise ValueError("client-received token count disagrees with the "
+                         "server's /stats tokens_out")
+    if len(rows) > 1:
+        g1 = rows["1"]["goodput_tok_s"]
+        gmax = rows[str(max(int(k) for k in rows))]["goodput_tok_s"]
+        if d["goodput_2r_gt_1r"] != (gmax > g1):
+            raise ValueError("goodput_2r_gt_1r inconsistent with rows")
+    if not d["validated"]:
+        raise ValueError("run not validated (goodput did not scale with "
+                         "replicas, or an invariant failed)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--smoke", dest="smoke", action="store_true",
+                      help="use the smoke config (the default; kept explicit "
+                           "for CI invocations)")
+    size.add_argument("--full", dest="smoke", action="store_false",
+                      help="benchmark the full arch config instead of smoke")
+    ap.set_defaults(smoke=True)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=300.0,
+                    help="Poisson arrival rate (requests/s); the default "
+                         "saturates the smoke engine so replica scaling "
+                         "is visible")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--replicas-max", type=int, default=2,
+                    help="benchmark 1..K replicas (default 2)")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel degree per replica (disjoint "
+                         "(1, tp) meshes via make_replica_meshes)")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="admission cap (0 = generous default: no "
+                         "rejections in the measured window)")
+    ap.add_argument("--pace-us", type=float, default=5000.0, dest="pace_us",
+                    help="modeled per-step device latency (us), slept "
+                         "off-GIL in each replica's worker thread — see "
+                         "the module docstring; 0 measures raw functional "
+                         "CPU (replica scaling then disappears on "
+                         "few-core hosts)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_traffic.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, arch=args.arch, n_slots=args.slots,
+        s_max=args.s_max, rate_rps=args.rate, n_requests=args.requests,
+        max_new=args.max_new, replicas_max=args.replicas_max, tp=args.tp,
+        queue_limit=args.queue_limit, seed=args.seed, pace_us=args.pace_us,
+        out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,9 @@
   bench_calibrate— profile -> calibrate -> replay: fit the cost model to
                    measured kernel/step times, replay a holdout serve
                    run, gate on prediction error (emits BENCH_calib.json)
+  bench_traffic  — Poisson arrivals through the async front door: p50/p99
+                   TTFT, per-token latency, goodput for 1 and 2 router
+                   replicas (emits BENCH_traffic.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <name>]
 """
@@ -40,6 +43,7 @@ def main() -> None:
         bench_roofline,
         bench_serve,
         bench_system,
+        bench_traffic,
     )
 
     suites = {
@@ -52,6 +56,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "serve": bench_serve,
         "calibrate": bench_calibrate,
+        "traffic": bench_traffic,
     }
     names = [args.only] if args.only else list(suites)
     for name in names:

@@ -156,6 +156,7 @@ DEFAULT_CONTRACT_MODULES = (
     "repro.core.execution",
     "repro.kernels.packed_mac",
     "repro.serve.engine",
+    "repro.serve.frontdoor.worker",
     "repro.profile.trace",
 )
 

@@ -274,6 +274,29 @@ def tp_mesh():
     return _TP_MESH
 
 
+def replica_device_groups(replicas: int, tp: int) -> List[List[Any]]:
+    """Partition the visible devices into ``replicas`` disjoint groups
+    of ``tp`` devices — the device plan behind the serving front door's
+    multi-replica router (DESIGN.md §12): the groups are the rows of a
+    ``(replicas, tp)`` grid, i.e. replication lives on the ``"data"``
+    axis of the device plane while each replica's internal TP sharding
+    keeps the ``"model"`` axis. Groups are disjoint, so replica engines
+    never contend for a device and their collectives never cross."""
+    if replicas < 1 or tp < 1:
+        raise ValueError(f"need replicas >= 1 and tp >= 1, got "
+                         f"replicas={replicas} tp={tp}")
+    devs = jax.devices()
+    need = replicas * tp
+    if len(devs) < need:
+        raise ValueError(
+            f"{replicas} replicas x tp={tp} needs {need} devices but only "
+            f"{len(devs)} are visible (on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before the "
+            "first jax import)"
+        )
+    return [list(devs[r * tp:(r + 1) * tp]) for r in range(replicas)]
+
+
 # ---------------------------------------------------------------------------
 # Activation sharding (logical axes, module-global switch)
 # ---------------------------------------------------------------------------

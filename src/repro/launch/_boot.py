@@ -12,15 +12,15 @@ from __future__ import annotations
 import os
 
 
-def tp_from_argv(argv) -> int:
-    """Best-effort ``--tp N`` / ``--tp=N`` scan of raw argv (argparse
-    hasn't run yet at bootstrap time). Unparseable values return 0 —
-    argparse will reject them properly later."""
+def int_flag_from_argv(argv, flag: str) -> int:
+    """Best-effort ``--flag N`` / ``--flag=N`` scan of raw argv
+    (argparse hasn't run yet at bootstrap time). Unparseable values
+    return 0 — argparse will reject them properly later."""
     for i, a in enumerate(argv):
         val = None
-        if a == "--tp" and i + 1 < len(argv):
+        if a == flag and i + 1 < len(argv):
             val = argv[i + 1]
-        elif a.startswith("--tp="):
+        elif a.startswith(flag + "="):
             val = a.split("=", 1)[1]
         if val is not None:
             try:
@@ -30,16 +30,24 @@ def tp_from_argv(argv) -> int:
     return 0
 
 
+def tp_from_argv(argv) -> int:
+    return int_flag_from_argv(argv, "--tp")
+
+
 def force_host_devices_for_tp(argv) -> int:
     """If argv requests ``--tp N > 1`` and the device-count flag isn't
-    already set, force ``max(N, 8)`` virtual host devices. Call before
-    the first jax import. Returns the scanned tp (0/1 = untouched)."""
+    already set, force enough virtual host devices — ``N`` per serving
+    replica when ``--replicas R`` is also present (the front door's
+    router places each replica on a disjoint (1, tp) mesh), at least 8
+    so the TP contract axes can still trace. Call before the first jax
+    import. Returns the scanned tp (0/1 = untouched)."""
     tp = tp_from_argv(argv)
+    replicas = max(int_flag_from_argv(argv, "--replicas"), 1)
     if tp > 1 and "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""
     ):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={max(tp, 8)}"
+            + f" --xla_force_host_platform_device_count={max(tp * replicas, 8)}"
         ).strip()
     return tp

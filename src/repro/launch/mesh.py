@@ -43,6 +43,25 @@ def make_tp_mesh(tp: int):
     )
 
 
+def make_replica_meshes(replicas: int, tp: int):
+    """One ``(1, tp)`` serving mesh per router replica, carved from
+    disjoint rows of the ``(replicas, tp)`` device grid
+    (:func:`repro.dist.sharding.replica_device_groups`) — the front
+    door's replication axis is the grid's ``"data"`` row dimension,
+    while every per-replica mesh keeps the production axis names
+    ``("data", "model")`` so the engine's TP sharding specs apply
+    unchanged inside each replica."""
+    import numpy as np
+
+    from repro.dist.sharding import replica_device_groups
+
+    groups = replica_device_groups(replicas, tp)
+    return [
+        jax.sharding.Mesh(np.asarray(g).reshape(1, tp), ("data", "model"))
+        for g in groups
+    ]
+
+
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     n = len(jax.devices())

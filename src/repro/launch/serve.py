@@ -3,6 +3,17 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 8 --slots 4
 
+``--serve-http`` starts the async front door instead of the one-shot
+batch run (DESIGN.md §12): an HTTP + WebSocket server (stdlib asyncio)
+streaming tokens per request, with ``--replicas N`` engine replicas
+behind a least-loaded router and bounded admission (``--queue-limit``,
+429 on overflow). ``--selftest`` runs the front door against itself —
+stream one request, cancel a second mid-stream, verify /stats, clean
+shutdown — and exits; CI uses it as the front-door smoke:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --serve-http \
+        --replicas 2 --selftest
+
 The serving CiM execution spec is selected with ``--exec-spec`` as
 ``formulation[/backend[/packing[/flavor]]]``, e.g. ``exact/jnp`` (the
 near-memory exact baseline), ``blocked`` (faithful per-16-block ADC
@@ -84,6 +95,30 @@ def main(argv=None):
                          "serve.decode_step / serve.prepare) to a JSON-lines "
                          "trace file — repro.profile reads it back for "
                          "calibration and replay")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="start the async HTTP/WebSocket front door "
+                         "(repro.serve.frontdoor) instead of the one-shot "
+                         "batch run; serves until interrupted")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="engine replicas behind the front-door router "
+                         "(each a full ContinuousBatcher; with --tp > 1 "
+                         "each replica gets its own disjoint (1, tp) mesh)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8471,
+                    help="front-door TCP port (0 = ephemeral)")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="admission cap: total in-flight requests across "
+                         "replicas; over it, new requests get 429")
+    ap.add_argument("--pace-us", type=float, default=0.0, dest="pace_us",
+                    help="modeled per-step device latency in microseconds, "
+                         "slept off-GIL in each replica's worker thread "
+                         "(benchmarks/bench_traffic.py uses this to make "
+                         "replica scaling measurable on CPU hosts; 0 = off)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="front-door smoke: start --serve-http on an "
+                         "ephemeral port, stream one request, cancel a "
+                         "second mid-stream, check /stats, shut down "
+                         "cleanly, exit 0")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -98,6 +133,13 @@ def main(argv=None):
         ap.error("--prepare-weights requires --exec-spec")
     if args.compress_tp and args.tp <= 1:
         ap.error("--compress-tp requires --tp > 1")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.selftest:
+        args.serve_http = True
+        args.port = 0  # ephemeral: the selftest races no other listener
+    if args.serve_http:
+        return _serve_http_main(args, cfg, params, exec_spec)
     mesh = None
     if args.tp > 1:
         from repro.launch.mesh import make_tp_mesh
@@ -133,6 +175,126 @@ def main(argv=None):
         print(f"[serve] profile: {n_ev} trace events -> {args.profile}")
     assert all(r.done for r in reqs)
     return 0
+
+
+# ---------------------------------------------------------------------------
+# --serve-http: the async front door (repro.serve.frontdoor)
+# ---------------------------------------------------------------------------
+
+
+def build_frontdoor(args, cfg, params, exec_spec):
+    """(FrontDoor, profiler) for the parsed args: N replica batchers
+    (disjoint (1, tp) meshes when --tp > 1), one router, one tracker.
+    Shared with benchmarks/bench_traffic.py so the bench serves through
+    the identical stack."""
+    from repro.serve.frontdoor import (
+        EngineWorker,
+        FrontDoor,
+        ReplicaRouter,
+        SLOTracker,
+    )
+
+    meshes = [None] * args.replicas
+    if args.tp > 1:
+        from repro.launch.mesh import make_replica_meshes
+
+        meshes = make_replica_meshes(args.replicas, args.tp)
+    profiler = None
+    if args.profile:
+        from repro.profile.trace import Profiler
+
+        # one trace file for every replica AND the frontdoor.request
+        # events — the profiler appends per event, so streams interleave
+        profiler = Profiler(args.profile)
+    batchers = [
+        ContinuousBatcher(
+            params, cfg, n_slots=args.slots, s_max=args.s_max,
+            exec_spec=exec_spec, temperature=args.temperature,
+            seed=args.seed, fused=not args.loop_decode,
+            prepare_weights=args.prepare_weights, mesh=meshes[i],
+            compress_tp=args.compress_tp, profile=profiler,
+        )
+        for i in range(args.replicas)
+    ]
+    tracker = SLOTracker(
+        profiler=profiler,
+        exec_spec=args.exec_spec or "mode:off",
+        mesh={"data": args.replicas, "model": args.tp} if args.tp > 1 else None,
+    )
+    workers = [EngineWorker(f"r{i}", b, tracker,
+                            pace_us=getattr(args, "pace_us", 0.0))
+               for i, b in enumerate(batchers)]
+    router = ReplicaRouter(workers, queue_limit=args.queue_limit)
+    return FrontDoor(router, tracker, host=args.host, port=args.port), profiler
+
+
+async def _selftest_session(door) -> None:
+    """The CI front-door smoke: one full streamed request, one
+    cancelled mid-stream, /stats agrees, nothing left in flight."""
+    from repro.serve.frontdoor.client import WSClient, http_json
+
+    host, port = door.host, door.port
+    ws = await WSClient.connect(host, port)
+    full = await ws.generate([1, 2, 3], max_new=6)
+    assert len(full["tokens"]) == 6, full
+    assert full["done"]["cancelled"] is False, full
+    part = await ws.generate([4, 5], max_new=32, cancel_after=2)
+    assert part["done"]["cancelled"] is True, part
+    assert 2 <= len(part["tokens"]) < 32, part
+    await ws.close()
+    status, stats = await http_json(host, port, "GET", "/stats")
+    assert status == 200, (status, stats)
+    reqs = stats["slo"]["requests"]
+    assert reqs["completed"] == 1 and reqs["cancelled"] == 1, reqs
+    assert stats["router"]["in_flight"] == 0, stats["router"]
+    print(f"[serve] selftest: streamed {len(full['tokens'])} tokens, "
+          f"cancelled after {len(part['tokens'])}, /stats consistent")
+
+
+async def _serve_http_async(args, cfg, params, exec_spec) -> int:
+    import asyncio
+    import signal
+
+    door, profiler = build_frontdoor(args, cfg, params, exec_spec)
+    host, port = await door.start()
+    n_rep, n_tp = args.replicas, args.tp
+    print(f"[serve] front door on http://{host}:{port} "
+          f"({n_rep} replica{'s' if n_rep != 1 else ''}"
+          + (f", tp={n_tp}" if n_tp > 1 else "")
+          + f", queue-limit {args.queue_limit}) — "
+          "routes: /healthz /stats /v1/generate /v1/stream")
+    try:
+        if args.selftest:
+            await _selftest_session(door)
+        else:
+            stop = asyncio.Event()
+            loop = asyncio.get_running_loop()
+            for sig in (signal.SIGINT, signal.SIGTERM):
+                try:
+                    loop.add_signal_handler(sig, stop.set)
+                except NotImplementedError:
+                    pass  # non-unix event loops: rely on KeyboardInterrupt
+            await stop.wait()
+            print("[serve] draining...")
+    finally:
+        await door.stop()
+        if profiler is not None:
+            profiler.close()
+    for w in door.router.workers:
+        assert not w.load, f"replica {w.name} still has load after stop"
+    print("[serve] clean shutdown"
+          + (" — selftest ok" if args.selftest else ""))
+    return 0
+
+
+def _serve_http_main(args, cfg, params, exec_spec) -> int:
+    import asyncio
+
+    try:
+        return asyncio.run(_serve_http_async(args, cfg, params, exec_spec))
+    except KeyboardInterrupt:
+        print("[serve] interrupted")
+        return 130
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from repro.profile.replay import (  # noqa: F401
     compare_to_measured,
     make_array_kernel_model,
     make_kernel_model,
+    poisson_requests,
     predict_decode_step_us,
     requests_from_trace,
     requests_like_bench,

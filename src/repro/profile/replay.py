@@ -48,11 +48,15 @@ from repro.profile.trace import TraceEvent
 
 @dataclasses.dataclass(frozen=True)
 class ReplayRequest:
-    """One simulated request: only the lengths matter for timing."""
+    """One simulated request: the lengths drive the work, and
+    ``arrival_us`` (0 = offered up front, the offline-replay default)
+    drives *when* the simulated engine may admit it — the traffic-model
+    axis shared with benchmarks/bench_traffic.py."""
 
     rid: int
     prompt_len: int
     max_new: int
+    arrival_us: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +93,42 @@ def requests_from_trace(events: Sequence[TraceEvent]) -> List[ReplayRequest]:
         for rid, p_len, max_new in e.meta.get("prompts", []):
             out.append(ReplayRequest(int(rid), int(p_len), int(max_new)))
     return sorted(out, key=lambda r: r.rid)
+
+
+def poisson_requests(
+    rate_rps: float,
+    seed: int = 0,
+    n_requests: int = 16,
+    prompt_len_max: int = 4,
+    max_new: int = 8,
+) -> List[ReplayRequest]:
+    """Synthetic Poisson traffic: ``n_requests`` arrivals with
+    exponential inter-arrival gaps at ``rate_rps`` requests/second,
+    prompt lengths uniform in [1, prompt_len_max] and ``max_new``
+    uniform in [2, max_new] — the same ragged family as
+    :func:`requests_like_bench`, but with a real arrival process.
+
+    Deterministic in ``seed`` (one ``numpy`` Generator drives gaps and
+    lengths), so the *same* workload can be replayed through
+    :func:`simulate` for capacity planning and driven through the real
+    front door by ``benchmarks/bench_traffic.py`` — closing the loop
+    between predicted and measured load points (DESIGN.md §12)."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    if max_new < 2:
+        raise ValueError(f"max_new must be >= 2, got {max_new}")
+    rng = np.random.default_rng(seed)
+    gaps_us = rng.exponential(1e6 / rate_rps, size=n_requests)
+    arrivals = np.cumsum(gaps_us)
+    return [
+        ReplayRequest(
+            rid=i,
+            prompt_len=int(rng.integers(1, prompt_len_max + 1)),
+            max_new=int(rng.integers(2, max_new + 1)),
+            arrival_us=float(arrivals[i]),
+        )
+        for i in range(n_requests)
+    ]
 
 
 def _next_pow2(n: int, lo: int = 4) -> int:
@@ -203,11 +243,20 @@ def simulate(
     *counts* match the engine's and only the *durations* come from the
     calibration.
 
+    Requests with a nonzero ``arrival_us`` (e.g. from
+    :func:`poisson_requests`) are admitted only once the simulated
+    clock reaches them — an idle engine fast-forwards to the next
+    arrival — so the replay covers *traffic-shaped* load points, not
+    just offered-up-front batches. With all arrivals at 0 (the
+    default) the behavior is the original offline replay, unchanged.
+
     Returns predicted ``tok_s``, ``p50_step_us`` / ``p99_step_us`` over
     the decode steps, totals, and the dependency ``graph`` (the Node
     list, JSON-ready)."""
     fit = table.engine_fit(arch, mesh)
-    queue = list(requests)
+    # stable sort: equal arrivals (the offline all-zero case) keep
+    # submission order, so pre-arrival replays are byte-identical
+    queue = sorted(requests, key=lambda r: r.arrival_us)
     slots: List[Optional[ReplayRequest]] = [None] * n_slots
     produced: List[int] = [0] * n_slots
     pos: List[int] = [0] * n_slots
@@ -223,9 +272,10 @@ def simulate(
 
     while queue or any(r is not None for r in slots):
         # -- fill slots + batched prefill (engine: _fill_slots_fused) --
+        # only *arrived* requests are admissible at the current clock
         newly = []
         for s in range(n_slots):
-            if slots[s] is None and queue:
+            if slots[s] is None and queue and queue[0].arrival_us <= clock:
                 slots[s] = queue.pop(0)
                 newly.append(s)
         if newly:
@@ -235,6 +285,7 @@ def simulate(
                 s_pad = max_len
             deps = (last_nid,) if last_nid is not None else ()
             start = max((nodes[d].end_us for d in deps), default=clock)
+            start = max(start, clock)
             node = Node(len(nodes), "prefill", deps, fit.prefill_us,
                         start, len(newly))
             nodes.append(node)
@@ -249,6 +300,9 @@ def simulate(
         active = [s for s in range(n_slots) if slots[s] is not None]
         if not active:
             if queue:
+                # idle engine waiting on traffic: fast-forward to the
+                # next arrival (never backwards)
+                clock = max(clock, queue[0].arrival_us)
                 continue
             break
         # -- one fused decode step (engine: _step_fused) ---------------

@@ -169,6 +169,9 @@ class Request:
     # capacity, so a short prompt co-batched with a long one can run out
     # of slots earlier than per-request generate() would
     truncated: bool = False
+    # set by ContinuousBatcher.cancel(): the request was withdrawn (from
+    # the queue, or mid-decode — its slot freed) before max_new tokens
+    cancelled: bool = False
 
 
 def _next_pow2(n: int, lo: int = 4) -> int:
@@ -372,6 +375,7 @@ class ContinuousBatcher:
         self.queue: List[Request] = []
         self.decode_steps = 0
         self.host_syncs = 0
+        self.prefill_batches = 0
         self._step_idx = 0
         self._prefill_idx = 0
         if not fused and self.temperature != 0.0:
@@ -532,6 +536,7 @@ class ContinuousBatcher:
         # analysis: host-sync ok — the one documented fetch per fill batch
         toks = np.asarray(toks)
         self.host_syncs += 1
+        self.prefill_batches += 1
         for s in newly:
             req = self.slot_req[s]
             req.generated.append(int(toks[s]))
@@ -620,6 +625,7 @@ class ContinuousBatcher:
                 # analysis: host-sync ok — looped baseline syncs per slot by design
                 tok = int(jnp.argmax(logits[0, -1]))
                 self.host_syncs += 1
+                self.prefill_batches += 1  # looped prefill is per-slot
                 req.generated.append(tok)
                 self._last_tok[s] = tok
                 self.slot_pos[s] = len(req.prompt)
@@ -663,6 +669,37 @@ class ContinuousBatcher:
             )
         self.queue.append(req)
 
+    def cancel(self, request_id: int) -> bool:
+        """Withdraw a request by rid: drop it from the queue, or — if it
+        is mid-decode — free its slot so the next fill reuses it.
+
+        Freeing a slot is exactly the completion path (``slot_req[s] =
+        None``): the row keeps riding the fused step as a dead lane until
+        refilled, its sampled tokens discarded like any finished slot's,
+        and no other row's cache state or token stream is perturbed
+        (pinned by tests/test_frontdoor.py). The request finishes with
+        ``done=True, cancelled=True`` and keeps whatever it generated.
+
+        Host-side bookkeeping only — call it between steps (the async
+        front door applies cancels at the step boundary; see
+        repro.serve.frontdoor.worker). Returns False when rid is not in
+        flight (already finished, or never submitted)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == request_id:
+                del self.queue[i]
+                req.done = True
+                req.cancelled = True
+                return True
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.rid == request_id:
+                req.done = True
+                req.cancelled = True
+                req.truncated = len(req.generated) < req.max_new
+                self.slot_req[s] = None
+                return True
+        return False
+
     def _fill_slots(self):
         if self.fused:
             self._fill_slots_fused()
@@ -680,7 +717,11 @@ class ContinuousBatcher:
         return self._step_looped(active)
 
     def stats(self) -> Dict[str, int]:
-        return {"decode_steps": self.decode_steps, "host_syncs": self.host_syncs}
+        return {
+            "decode_steps": self.decode_steps,
+            "host_syncs": self.host_syncs,
+            "prefill_batches": self.prefill_batches,
+        }
 
     def run(self) -> None:
         try:

@@ -1,0 +1,32 @@
+"""``repro.serve.frontdoor`` — the async serving front door
+(DESIGN.md §12): a stdlib-asyncio HTTP + WebSocket server over N
+:class:`~repro.serve.engine.ContinuousBatcher` replicas.
+
+  * :mod:`.protocol` — HTTP/1.1 + RFC 6455 wire layer (server and
+    client side, stdlib only);
+  * :mod:`.worker`   — one engine replica: step in a worker thread,
+    token/cancel plumbing at step boundaries, the
+    ``serve.frontdoor.step_passthrough`` tracing contract;
+  * :mod:`.router`   — least-loaded dispatch, bounded admission
+    (QueueFull -> 429), replica drain/health;
+  * :mod:`.slo`      — per-request TTFT / queue-wait / per-token
+    latency, aggregated for ``/stats`` and emitted as
+    ``frontdoor.request`` trace events;
+  * :mod:`.server`   — the routes: /healthz, /stats, /v1/generate,
+    /v1/stream (WebSocket);
+  * :mod:`.client`   — the matching stdlib client (tests and
+    ``benchmarks/bench_traffic.py``).
+"""
+from repro.serve.frontdoor.client import WSClient, http_json  # noqa: F401
+from repro.serve.frontdoor.protocol import ProtocolError  # noqa: F401
+from repro.serve.frontdoor.router import (  # noqa: F401
+    NoReplicaAvailable,
+    QueueFull,
+    ReplicaRouter,
+)
+from repro.serve.frontdoor.server import FrontDoor  # noqa: F401
+from repro.serve.frontdoor.slo import RequestSLO, SLOTracker  # noqa: F401
+from repro.serve.frontdoor.worker import (  # noqa: F401
+    EngineWorker,
+    passthrough_step,
+)
