@@ -32,6 +32,14 @@ before the first jax import — so the row measures the *serving
 discipline under sharding* (token identity, decode steps, host-sync
 counts survive TP; see tests/test_tp_serve.py), not real TP speedup.
 
+The ``cache_dtype`` sweep (always emitted) serves the same fused
+workload under each KV-cache storage dtype (DESIGN.md §13) and reports,
+per dtype: measured cache bytes per slot, the capacity multiplier vs
+bf16 (how many quantized slots fit in the bf16 cache budget), and
+whether fused serving stayed token-identical to per-request
+``generate()`` under the same dtype (the correctness bar int8 must meet
+exactly; ternary reports its greedy common-prefix length instead).
+
 Runs the smoke config by default (matching the ``benchmarks.run``
 harness, and CPU-feasible); ``--full`` opts into the full arch config.
 
@@ -104,6 +112,72 @@ def _run_mode(params, cfg, fused: bool, n_slots: int, s_max: int,
     }
 
 
+def _cache_bytes_per_slot(cfg, n_slots: int, s_max: int) -> int:
+    caches = T.init_caches(cfg, n_slots, s_max)
+    total = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree_util.tree_leaves(caches))
+    return total // n_slots
+
+
+def _cache_dtype_sweep(params, cfg, n_slots: int, s_max: int,
+                       n_requests: int, max_new: int):
+    """One fused serving row per KV-cache storage dtype, plus the
+    capacity and correctness columns DESIGN.md §13 claims."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve.engine import generate
+
+    rows = []
+    bf16_bytes = None
+    for cd in ("bf16", "int8", "ternary"):
+        # per-row activation scales (DESIGN.md §9) so the identity
+        # column isolates the cache dtype: under the default per-tensor
+        # scale, co-batched rows couple and fused != generate for
+        # reasons unrelated to the KV cache
+        ccfg = cfg.replace(
+            quant=dataclasses.replace(cfg.quant, cache_dtype=cd,
+                                      act_scale="per_row"))
+        row = _run_mode(params, ccfg, True, n_slots, s_max, n_requests,
+                        max_new)
+        row["mode"] = f"fused_{cd}"
+        row["cache_dtype"] = cd
+        per_slot = _cache_bytes_per_slot(ccfg, n_slots, s_max)
+        row["cache_bytes_per_slot"] = per_slot
+        if cd == "bf16":
+            bf16_bytes = per_slot
+        # how many quantized slots the bf16 cache budget holds
+        row["capacity_vs_bf16"] = round(bf16_bytes / per_slot, 2)
+        row["slots_at_equal_memory"] = int(n_slots * bf16_bytes // per_slot)
+        # fused-vs-generate token identity under the same cache dtype
+        batcher = ContinuousBatcher(params, ccfg, n_slots=n_slots,
+                                    s_max=s_max, fused=True)
+        reqs = _workload(cfg, n_requests, max_new)
+        for r in reqs:
+            batcher.submit(r)
+        batcher.run()
+        min_prefix = None
+        matches = True
+        for r in reqs:
+            solo = np.asarray(generate(
+                params, jnp.asarray([r.prompt], jnp.int32), ccfg,
+                max_new=r.max_new, s_max=s_max))[0].tolist()
+            prefix = 0
+            for a, b in zip(r.generated, solo):
+                if a != b:
+                    break
+                prefix += 1
+            matches = matches and (r.generated == solo)
+            min_prefix = prefix if min_prefix is None else min(min_prefix,
+                                                               prefix)
+        row["matches_generate"] = matches
+        row["min_prefix_vs_generate"] = min_prefix
+        rows.append(row)
+    return rows
+
+
 def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         s_max: int = 64, n_requests: int = 8, max_new: int = 6,
         tp: int = 0, out: str = "BENCH_serve.json"):
@@ -125,6 +199,8 @@ def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
             fused["tok_s"] / max(looped["tok_s"], 1e-9), 2),
         "host_sync_reduction": round(
             looped["host_syncs"] / max(fused["host_syncs"], 1), 2),
+        "cache_dtype": _cache_dtype_sweep(params, cfg, n_slots, s_max,
+                                          n_requests, max_new),
     }
     if tp > 1:
         from repro.launch.mesh import make_tp_mesh

@@ -63,6 +63,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import threading
 from typing import Callable, Dict, Iterator, Optional, Tuple
 
 import jax
@@ -248,6 +249,14 @@ _TILE_CACHE: Dict[Tuple, Tuple[int, int, int]] = {}
 # benchmark/test lever: force every call into one shape class (None = off)
 _CLASS_OVERRIDE: Optional[str] = None
 
+# Guards _TILE_CACHE and _CLASS_OVERRIDE: the front door's ReplicaRouter
+# drives N ContinuousBatchers from N single-thread executors, so
+# tiles_for races autotune/override writes without it. Dict reads of
+# CPython builtins are atomic, but the override read-compose-lookup in
+# tiles_for is not — and the override context manager below must
+# restore the *pre-entry* value even under interleaving.
+_DISPATCH_LOCK = threading.Lock()
+
 
 def shape_class(m: int) -> str:
     """The dispatch class of an (M, K) x (K, N) MAC: "decode" for
@@ -256,21 +265,50 @@ def shape_class(m: int) -> str:
     return "decode" if m <= DECODE_M_MAX else "prefill"
 
 
-def set_shape_class_override(cls: Optional[str]) -> None:
+class _ShapeClassOverride:
+    """Handle returned by :func:`set_shape_class_override`. The override
+    is already installed at construction; using the handle as a context
+    manager restores the previous value on exit, so
+
+        with set_shape_class_override("prefill"):
+            ...
+
+    is exception-safe, while the historical imperative call (ignore the
+    return value, later call ``set_shape_class_override(None)``) keeps
+    working unchanged."""
+
+    def __init__(self, prev: Optional[str]):
+        self._prev = prev
+
+    def __enter__(self) -> "_ShapeClassOverride":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        set_shape_class_override(self._prev)
+        return False
+
+
+def set_shape_class_override(cls: Optional[str]) -> _ShapeClassOverride:
     """Force tile resolution into one shape class regardless of M (the
     pre-PR behaviour is ``"prefill"`` — decode shapes padded to the
     128-row tile). Benchmarks use it to measure old-vs-new on the same
     shape; None restores shape-derived dispatch. Affects new traces only
-    (tiles are resolved per call, outside jit)."""
+    (tiles are resolved per call, outside jit). Returns a context
+    manager restoring the previous override on exit (optional — plain
+    imperative use stays valid). Thread-safe."""
     global _CLASS_OVERRIDE
     if cls is not None and cls not in SHAPE_CLASSES:
         raise ValueError(f"unknown shape class {cls!r} (use {SHAPE_CLASSES})")
-    _CLASS_OVERRIDE = cls
+    with _DISPATCH_LOCK:
+        prev = _CLASS_OVERRIDE
+        _CLASS_OVERRIDE = cls
+    return _ShapeClassOverride(prev)
 
 
 def clear_tile_cache() -> None:
-    """Drop every autotuned winner (tests / re-tuning)."""
-    _TILE_CACHE.clear()
+    """Drop every autotuned winner (tests / re-tuning). Thread-safe."""
+    with _DISPATCH_LOCK:
+        _TILE_CACHE.clear()
 
 
 def tiles_for(
@@ -287,8 +325,9 @@ def tiles_for(
     entry = _REGISTRY.get(spec.registry_key)
     if entry is None or entry.tiles is None:
         return None
-    cls = _CLASS_OVERRIDE or shape_class(m)
-    cached = _TILE_CACHE.get((spec.registry_key, spec.block, cls))
+    with _DISPATCH_LOCK:
+        cls = _CLASS_OVERRIDE or shape_class(m)
+        cached = _TILE_CACHE.get((spec.registry_key, spec.block, cls))
     if cached is not None:
         return cached
     # an override crossing the natural class substitutes a representative
@@ -364,7 +403,8 @@ def autotune(
                     f"calibrated tiles {tiles} invalid for {spec.name} "
                     f"(block={spec.block})"
                 )
-            _TILE_CACHE[(spec.registry_key, spec.block, cls)] = tiles
+            with _DISPATCH_LOCK:
+                _TILE_CACHE[(spec.registry_key, spec.block, cls)] = tiles
             report[cls] = {"tiles": tiles, "us": None, "candidates": {},
                            "source": "calibration"}
         return report
@@ -407,7 +447,8 @@ def autotune(
                 best = tiles
         if best is None:
             raise ValueError(f"no valid tile candidate for {spec.name}/{cls}")
-        _TILE_CACHE[(spec.registry_key, spec.block, cls)] = best
+        with _DISPATCH_LOCK:
+            _TILE_CACHE[(spec.registry_key, spec.block, cls)] = best
         report[cls] = {
             "tiles": best,
             "us": timings["x".join(map(str, best))],

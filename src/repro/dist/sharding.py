@@ -201,7 +201,13 @@ def param_specs(
 def cache_specs(caches: PyTree, mesh, batch: int) -> PyTree:
     """Decode-cache PartitionSpecs. Stacked cache leaves are
     (L, B, S/state...): batch over the data-like axes, the first trailing
-    dim that divides over "model" (KV caches: the sequence dim)."""
+    dim that divides over "model" (KV caches: the sequence dim).
+
+    Quantized caches (DESIGN.md §13) need no special casing: int8/uint8
+    code leaves keep the (L, B, S, ...) layout and their per-(row,
+    position) scale leaves are (L, B, S) — both split on the sequence
+    dim under the same rule, so each device stores its sequence shard
+    of the codes together with the matching shard of the scales."""
     axis_sizes = mesh_axis_sizes(mesh)
     daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dsize = _axis_size(daxes, axis_sizes)

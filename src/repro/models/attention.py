@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import ternary as tern
 from repro.models import layers as L
 
 
@@ -38,6 +39,126 @@ class MLACache(NamedTuple):
         return MLACache(
             jnp.zeros((batch, s_max, kv_lora), dtype),
             jnp.zeros((batch, s_max, rope_dim), dtype),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV caches (DESIGN.md §13)
+#
+# Storage: int8 symmetric codes, or ternary {-1,0,1} codes nibble-packed
+# two per byte (uint8). One f32 scale per (row, position) — the same
+# granularity as act_scale="per_row": each slot row quantizes
+# independently, so continuous batching never couples co-resident
+# requests through a shared amax. Dequantization is fused into the
+# attention contractions: the codes enter the score/value einsums
+# directly and the scale multiplies the (B, ..., Sk) score/prob
+# matrices, so no full-precision copy of the stacked cache is ever
+# materialized (pinned by the serve.fused_decode_step.kvq contract).
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array, cache_dtype: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` (B, S, ...) per (row, position) over every trailing
+    axis. Returns ``(codes, scale)`` with scale (B, S) f32:
+
+      * ``"int8"``:    symmetric ``round(x/scale)`` in [-127, 127],
+                       ``scale = amax/127`` (1.0 where the slice is all
+                       zero — dead pad rows stay exactly zero);
+      * ``"ternary"``: TWN codes in {-1,0,1} (:func:`~repro.core.
+                       ternary.ternarize`) nibble-packed two per byte
+                       along the last axis (uint8, last dim halved).
+    """
+    red = tuple(range(2, x.ndim))
+    xf = x.astype(jnp.float32)
+    if cache_dtype == "int8":
+        amax = jnp.max(jnp.abs(xf), axis=red)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.round(xf / scale[(...,) + (None,) * len(red)])
+        codes = jnp.clip(q, -127, 127).astype(jnp.int8)
+        return codes, scale
+    if cache_dtype == "ternary":
+        t, scale = tern.ternarize(xf, axis=red)
+        return pack_ternary_kv(t.astype(jnp.int8)), scale.reshape(x.shape[:2])
+    raise ValueError(f"quantize_kv: unknown cache_dtype {cache_dtype!r}")
+
+
+def pack_ternary_kv(t: jax.Array) -> jax.Array:
+    """Pack ternary codes {-1,0,1} (int8) two per byte along the last
+    axis: stored nibbles are ``t+1`` in {0,1,2}. Requires an even last
+    dim (checked at cache construction)."""
+    c = (t + 1).astype(jnp.uint8)
+    return (c[..., 0::2] << 4) | c[..., 1::2]
+
+
+def unpack_ternary_kv(p: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`pack_ternary_kv`: uint8 (..., D/2) -> codes
+    (..., D) in {-1,0,1} as ``dtype`` (the attention compute dtype —
+    codes are exactly representable in bf16)."""
+    hi = ((p >> 4) & 0xF).astype(jnp.int8) - 1
+    lo = (p & 0xF).astype(jnp.int8) - 1
+    codes = jnp.stack([hi, lo], axis=-1).reshape(p.shape[:-1] + (2 * p.shape[-1],))
+    return codes.astype(dtype)
+
+
+def _kv_codes(buf: jax.Array, dtype) -> jax.Array:
+    """Stored cache codes -> compute-dtype codes (int8 pass-through cast,
+    uint8 nibble-unpack). The only dequant step besides the score-matrix
+    scale multiply — it never touches f32 at cache shape."""
+    if buf.dtype == jnp.uint8:
+        return unpack_ternary_kv(buf, dtype)
+    return buf.astype(dtype)
+
+
+def _quant_zeros(shape: Tuple[int, ...], cache_dtype: str) -> jax.Array:
+    if cache_dtype == "ternary":
+        if shape[-1] % 2:
+            raise ValueError(
+                f"ternary cache_dtype packs 2 codes/byte along the last "
+                f"axis; got odd trailing dim {shape[-1]} (shape {shape})"
+            )
+        # all-zero codes pack to nibble value 1 on both halves
+        return jnp.full(shape[:-1] + (shape[-1] // 2,), 0x11, jnp.uint8)
+    if cache_dtype == "int8":
+        return jnp.zeros(shape, jnp.int8)
+    raise ValueError(f"unknown quantized cache_dtype {cache_dtype!r}")
+
+
+class QuantKVCache(NamedTuple):
+    """Quantized GQA cache: codes + per-(row, position) f32 scales.
+
+    ``k``/``v`` are int8 (B, S_max, H_kv, Dh) or ternary-packed uint8
+    (B, S_max, H_kv, Dh/2); the storage mode is carried by the leaf
+    dtype, so the pytree needs no static flag and generic cache
+    plumbing (stacking, donation, sharding) treats every leaf
+    uniformly."""
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array  # (B, S_max) f32
+    v_scale: jax.Array  # (B, S_max) f32
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, n_kv: int, head_dim: int,
+              cache_dtype: str = "int8"):
+        val = _quant_zeros((batch, s_max, n_kv, head_dim), cache_dtype)
+        sc = jnp.ones((batch, s_max), jnp.float32)
+        return QuantKVCache(val, val, sc, sc)
+
+
+class QuantMLACache(NamedTuple):
+    """Quantized MLA cache: latent + rope-key codes with per-(row,
+    position) scales (storage mode via leaf dtype, as QuantKVCache)."""
+    ckv: jax.Array
+    k_rope: jax.Array
+    ckv_scale: jax.Array    # (B, S_max) f32
+    krope_scale: jax.Array  # (B, S_max) f32
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, kv_lora: int, rope_dim: int,
+              cache_dtype: str = "int8"):
+        sc = jnp.ones((batch, s_max), jnp.float32)
+        return QuantMLACache(
+            _quant_zeros((batch, s_max, kv_lora), cache_dtype),
+            _quant_zeros((batch, s_max, rope_dim), cache_dtype),
+            sc, sc,
         )
 
 
@@ -97,6 +218,8 @@ def _sdpa(
     causal_offset,
     length: Optional[jax.Array] = None,
     start: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ):
     """q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dh). GQA via head grouping.
 
@@ -107,7 +230,16 @@ def _sdpa(
     start: (B,) first valid KV slot (mask out below) — left-padded
       batched prefill leaves dead pad slots at the front of each row's
       cache region; they stay masked for the slot's lifetime.
+    k_scale/v_scale: (B, Sk) f32 per-(row, position) scales of a
+      quantized cache (DESIGN.md §13) — then k/v carry int8 or
+      ternary-packed uint8 codes. Dequantization stays fused: codes
+      enter the contractions and the scale multiplies the score/prob
+      matrices (constant per k-position, so it factors out of the Dh
+      contraction); no full-precision cache copy is materialized.
     """
+    if k_scale is not None:
+        k = _kv_codes(k, q.dtype)
+        v = _kv_codes(v, q.dtype)
     b, sq, h, dh = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -126,6 +258,8 @@ def _sdpa(
     # bf16 operands, f32 accumulation (MXU-native; avoids materializing an
     # f32 copy of the KV cache) — see layers.accum_einsum
     scores = L.accum_einsum("bqhgd,bkhd->bhgqk", qg, k.astype(qg.dtype))
+    if k_scale is not None:
+        scores = scores * k_scale[:, None, None, None, :]
     scores = scores / jnp.sqrt(dh).astype(jnp.float32)
     if causal_offset is not None:
         off = jnp.asarray(causal_offset, jnp.int32)
@@ -141,15 +275,26 @@ def _sdpa(
         live = jnp.arange(sk)[None, :] >= start[:, None]
         scores = jnp.where(live[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale[:, None, None, None, :]
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
     return out.reshape(b, sq, h, dh)
 
 
-def _sdpa_chunked(q, k, v, chunk: int):
+def _sdpa_chunked(q, k, v, chunk: int,
+                  k_scale: Optional[jax.Array] = None,
+                  v_scale: Optional[jax.Array] = None):
     """Flash-style causal attention: scan over KV chunks with an online
     softmax — never materializes the (B, H, Sq, Sk) score matrix. Used for
     long training/prefill sequences (cfg.attn_chunk); numerics match
-    :func:`_sdpa` to fp tolerance (tests/test_models.py)."""
+    :func:`_sdpa` to fp tolerance (tests/test_models.py).
+
+    Optional k_scale/v_scale (B, Sk): quantized-cache codes in k/v, same
+    fused-dequant contract as :func:`_sdpa`, applied per KV chunk inside
+    the scan (the online softmax never sees a dequantized cache copy)."""
+    if k_scale is not None:
+        k = _kv_codes(k, q.dtype)
+        v = _kv_codes(v, q.dtype)
     b, sq, h, dh = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -159,11 +304,17 @@ def _sdpa_chunked(q, k, v, chunk: int):
     kc = k.reshape(b, nc, chunk, hkv, dh)
     vc = v.reshape(b, nc, chunk, hkv, dh)
     qpos = jnp.arange(sq)
+    scaled = k_scale is not None
 
     def body(carry, blk):
         m_prev, l_prev, acc = carry
-        kb, vb, ci = blk                       # (b, chunk, hkv, dh), idx
+        if scaled:
+            kb, vb, ci, ksb, vsb = blk
+        else:
+            kb, vb, ci = blk                   # (b, chunk, hkv, dh), idx
         s = L.accum_einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(qg.dtype))
+        if scaled:
+            s = s * ksb[:, None, None, None, :]
         s = s / jnp.sqrt(dh).astype(jnp.float32)
         kpos = ci * chunk + jnp.arange(chunk)
         mask = kpos[None, :] <= qpos[:, None]
@@ -172,17 +323,20 @@ def _sdpa_chunked(q, k, v, chunk: int):
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m_prev - m_new)
         l_new = l_prev * alpha + p.sum(axis=-1)
+        if scaled:
+            p = p * vsb[:, None, None, None, :]
         acc = acc * alpha[..., None] + L.accum_einsum(
             "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
         return (m_new, l_new, acc), None
 
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc))
+    if scaled:
+        xs = xs + (jnp.moveaxis(k_scale.reshape(b, nc, chunk), 1, 0),
+                   jnp.moveaxis(v_scale.reshape(b, nc, chunk), 1, 0))
     m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
-    (m_f, l_f, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0),
-        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc)),
-    )
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
     out = acc / jnp.maximum(l_f, 1e-30)[..., None]
     return jnp.moveaxis(out, -2, 1).reshape(b, sq, h, dh).astype(q.dtype)
 
@@ -200,7 +354,10 @@ def gqa_attention(
     written at ``cache_index`` (scalar, or (B,) for ragged decode where
     every row writes at its own position); attention runs against the
     whole cache. ``start`` marks each row's first valid cache slot
-    (left-padding dead zone — see DESIGN.md §6)."""
+    (left-padding dead zone — see DESIGN.md §6). A :class:`QuantKVCache`
+    quantizes the new tokens on write and attends over codes + scales
+    (DESIGN.md §13); the :class:`KVCache` path is untouched — bf16
+    serving stays bit-identical."""
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     qc = cfg.quant
@@ -216,6 +373,20 @@ def gqa_attention(
         else:
             out = _sdpa(q, k, v, causal_offset=0)
         new_cache = None
+    elif isinstance(cache, QuantKVCache):
+        cd = "ternary" if cache.k.dtype == jnp.uint8 else "int8"
+        k_q, k_s = quantize_kv(k, cd)
+        v_q, v_s = quantize_kv(v, cd)
+        k_all = write_cache_rows(cache.k, k_q, cache_index)
+        v_all = write_cache_rows(cache.v, v_q, cache_index)
+        ks_all = write_cache_rows(cache.k_scale, k_s, cache_index)
+        vs_all = write_cache_rows(cache.v_scale, v_s, cache_index)
+        new_cache = QuantKVCache(k_q, v_q, k_s, v_s)
+        length = _index_vector(cache_index, b) + s
+        out = _sdpa(
+            q, k_all, v_all, causal_offset=cache_index, length=length,
+            start=start, k_scale=ks_all, v_scale=vs_all,
+        )
     else:
         k_all = write_cache_rows(cache.k, k, cache_index)
         v_all = write_cache_rows(cache.v, v, cache_index)
@@ -279,7 +450,20 @@ def mla_attention(
     ckv = L.rms_norm(ckv, params["kv_norm"])
     k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
-    if cache is not None:
+    ckv_scale = krope_scale = None
+    if cache is not None and isinstance(cache, QuantMLACache):
+        cd = "ternary" if cache.ckv.dtype == jnp.uint8 else "int8"
+        ckv_q, ckv_s = quantize_kv(ckv, cd)
+        kr_q, kr_s = quantize_kv(k_rope, cd)
+        ckv_all = write_cache_rows(cache.ckv, ckv_q, cache_index)
+        krope_all = write_cache_rows(cache.k_rope, kr_q, cache_index)
+        ckv_scale = write_cache_rows(cache.ckv_scale, ckv_s, cache_index)
+        krope_scale = write_cache_rows(cache.krope_scale, kr_s, cache_index)
+        new_cache = QuantMLACache(ckv_q, kr_q, ckv_s, kr_s)
+        offset = cache_index
+        sk = ckv_all.shape[1]
+        length = _index_vector(cache_index, b) + s
+    elif cache is not None:
         ckv_all = write_cache_rows(cache.ckv, ckv, cache_index)
         krope_all = write_cache_rows(cache.k_rope, k_rope, cache_index)
         # new-token slices only; caller writes them into the stacked cache
@@ -296,10 +480,23 @@ def mla_attention(
     # bf16 operands + f32 accumulation: no f32 copy of the latent cache.
     w_uk = params["w_uk"].reshape(r, h, dn).astype(x.dtype)
     q_lat = L.accum_einsum("bqhd,rhd->bqhr", q_nope, w_uk)
-    scores = L.accum_einsum("bqhr,bkr->bhqk", q_lat.astype(x.dtype),
-                            ckv_all.astype(x.dtype))
-    scores = scores + L.accum_einsum(
-        "bqhd,bkd->bhqk", q_rope, krope_all.astype(q_rope.dtype))
+    if ckv_scale is not None:
+        # quantized latent cache: codes into the contractions, per-(row,
+        # position) scales onto the (B, H, Sq, Sk) score parts — the two
+        # score terms carry independent scales, so they are applied
+        # before the sum (DESIGN.md §13)
+        ckv_f = _kv_codes(ckv_all, x.dtype)
+        krope_f = _kv_codes(krope_all, q_rope.dtype)
+        scores = (L.accum_einsum("bqhr,bkr->bhqk", q_lat.astype(x.dtype), ckv_f)
+                  * ckv_scale[:, None, None, :])
+        scores = scores + (
+            L.accum_einsum("bqhd,bkd->bhqk", q_rope, krope_f)
+            * krope_scale[:, None, None, :])
+    else:
+        scores = L.accum_einsum("bqhr,bkr->bhqk", q_lat.astype(x.dtype),
+                                ckv_all.astype(x.dtype))
+        scores = scores + L.accum_einsum(
+            "bqhd,bkd->bhqk", q_rope, krope_all.astype(q_rope.dtype))
     scores = scores / jnp.sqrt(dn + dr).astype(jnp.float32)
     off = jnp.asarray(offset, jnp.int32)
     off = off[None] if off.ndim == 0 else off            # (1,) or (B,)
@@ -315,8 +512,13 @@ def mla_attention(
     probs = jax.nn.softmax(scores, axis=-1)
 
     # values from the latent: v = ckv W_uv, attended in latent space first.
-    lat = L.accum_einsum("bhqk,bkr->bqhr", probs.astype(x.dtype),
-                         ckv_all.astype(x.dtype))
+    if ckv_scale is not None:
+        lat = L.accum_einsum(
+            "bhqk,bkr->bqhr",
+            (probs * ckv_scale[:, None, None, :]).astype(x.dtype), ckv_f)
+    else:
+        lat = L.accum_einsum("bhqk,bkr->bqhr", probs.astype(x.dtype),
+                             ckv_all.astype(x.dtype))
     w_uv = params["w_uv"].reshape(r, h, dv).astype(x.dtype)
     out = L.accum_einsum("bqhr,rhd->bqhd", lat.astype(x.dtype), w_uv)
     out = out.reshape(b, s, h * dv).astype(x.dtype)

@@ -115,10 +115,23 @@ class QuantConfig:
     # quantization-level error. Needs dist.sharding.set_tp_mesh (the
     # serving engine installs it for compress_tp=True); inference-only.
     tp_reduce: str = "none"      # none | int8
+    # KV-cache storage precision (DESIGN.md §13). "bf16" stores the
+    # cache full-precision (bit-identical to the pre-§13 engine, pinned
+    # by test). "int8" stores symmetric int8 codes + one f32 scale per
+    # (row, position); "ternary" stores {-1,0,1} codes nibble-packed two
+    # per byte + the TWN per-(row, position) scale — 2x / 4x slot
+    # capacity at equal cache memory. Orthogonal to ``mode`` (the cache
+    # holds activations, not weights); SSM conv/state caches stay exact.
+    cache_dtype: str = "bf16"    # bf16 | int8 | ternary
 
     def __post_init__(self):
         if self.mode not in ("off", "ternary", "cim", "cim_fused"):
             raise ValueError(self.mode)
+        if self.cache_dtype not in ("bf16", "int8", "ternary"):
+            raise ValueError(
+                f"unknown cache_dtype {self.cache_dtype!r} "
+                "(bf16 | int8 | ternary)"
+            )
         if self.tp_reduce not in ("none", "int8"):
             raise ValueError(f"unknown tp_reduce {self.tp_reduce!r}")
         if self.act_scale not in ("per_tensor", "per_row"):

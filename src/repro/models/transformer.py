@@ -225,14 +225,15 @@ def _run_hybrid(params, x, cfg, positions, caches, cache_index, start=None):
             new_ssm.append(nc)
         # shared attention block (weights reused; per-application KV cache)
         h = L.rms_norm(x, sp["ln1"])
-        ac = attn.KVCache(*(a[s] for a in attn_caches)) if attn_caches is not None else None
+        # cache class rides the pytree (KVCache or QuantKVCache — §13)
+        ac = type(attn_caches)(*(a[s] for a in attn_caches)) if attn_caches is not None else None
         a, nac = attn.gqa_attention(sp["attn"], h, cfg, positions, ac, cache_index, start)
         x = x + a
         h = L.rms_norm(x, sp["ln2"])
         x = x + L.mlp(sp["mlp"], h, cfg.quant)
         if nac is not None:
             # write just the new-token slice into this application's cache
-            attn_caches = attn.KVCache(
+            attn_caches = type(attn_caches)(
                 *(
                     _write_token_slice(stack, n, s, cache_index)
                     for stack, n in zip(attn_caches, tuple(nac))
@@ -284,8 +285,23 @@ def forward(params, batch: Dict[str, jax.Array], cfg: ArchConfig) -> jax.Array:
 # Decode path
 # ---------------------------------------------------------------------------
 
+def _gqa_cache_zeros(cfg: ArchConfig, batch: int, s_max: int, dtype):
+    """One layer's GQA cache honoring ``cfg.quant.cache_dtype``
+    (DESIGN.md §13): bf16 keeps the exact pre-§13 buffers; int8/ternary
+    build quantized codes + per-(row, position) scale leaves."""
+    cd = cfg.quant.cache_dtype
+    if cd == "bf16":
+        return attn.KVCache.zeros(
+            batch, s_max, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    return attn.QuantKVCache.zeros(
+        batch, s_max, cfg.n_kv_heads, cfg.resolved_head_dim, cd)
+
+
 def init_caches(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
-    """Stacked decode caches for the whole layer stack."""
+    """Stacked decode caches for the whole layer stack. Attention caches
+    follow ``cfg.quant.cache_dtype``; SSM conv/state caches stay exact
+    f32 (they are small, fully rewritten each step, and carry recurrent
+    state whose quantization error would compound)."""
     if cfg.family == "ssm":
         one = ssm_lib.SSMCache.zeros(batch, cfg, jnp.float32)
         return jax.tree.map(
@@ -297,15 +313,21 @@ def init_caches(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
             lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), ssm_one
         )
         n_seg = cfg.n_layers // cfg.hybrid_attn_every
-        kv_one = attn.KVCache.zeros(batch, s_max, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+        kv_one = _gqa_cache_zeros(cfg, batch, s_max, dtype)
         kv_stack = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (n_seg,) + a.shape), kv_one
         )
         return (ssm_stack, kv_stack)
     if cfg.mla:
-        one = attn.MLACache.zeros(batch, s_max, cfg.kv_lora_rank, cfg.qk_rope_head_dim, dtype)
+        cd = cfg.quant.cache_dtype
+        if cd == "bf16":
+            one = attn.MLACache.zeros(
+                batch, s_max, cfg.kv_lora_rank, cfg.qk_rope_head_dim, dtype)
+        else:
+            one = attn.QuantMLACache.zeros(
+                batch, s_max, cfg.kv_lora_rank, cfg.qk_rope_head_dim, cd)
     else:
-        one = attn.KVCache.zeros(batch, s_max, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+        one = _gqa_cache_zeros(cfg, batch, s_max, dtype)
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
     )
@@ -314,9 +336,10 @@ def init_caches(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
 def _wrap_cache(cfg: ArchConfig, tree):
     if cfg.family in ("ssm",):
         return ssm_lib.SSMCache(*tree)
+    quant = cfg.quant.cache_dtype != "bf16"
     if cfg.mla:
-        return attn.MLACache(*tree)
-    return attn.KVCache(*tree)
+        return (attn.QuantMLACache if quant else attn.MLACache)(*tree)
+    return (attn.QuantKVCache if quant else attn.KVCache)(*tree)
 
 
 def _write_token_slice(stack: jax.Array, sl: jax.Array, layer, index) -> jax.Array:

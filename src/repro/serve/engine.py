@@ -242,6 +242,16 @@ class ContinuousBatcher:
     MACs through the explicit shard_map path (``execution.execute_tp``)
     whose per-layer partial-sum all-reduce moves int8 instead of f32 —
     approximate (quantization-level error), opt-in, quantized modes only.
+
+    ``cache_dtype`` overrides ``cfg.quant.cache_dtype`` (DESIGN.md §13):
+    ``"int8"``/``"ternary"`` store the KV cache as codes + per-(row,
+    position) f32 scales — 2x/4x the resident slots at equal cache
+    memory, and proportionally smaller TP cache shards — with dequant
+    fused into the attention contractions. ``"bf16"`` (the default via
+    QuantConfig) is pinned bit-identical to the unquantized engine. The
+    donated-buffer reset path (`_build_prefill_fused`'s in-jit
+    ``T.init_caches``) follows the same config, so freed slots are
+    rebuilt in cache_dtype layout with no host round-trip.
     """
 
     def __init__(
@@ -258,6 +268,7 @@ class ContinuousBatcher:
         mesh=None,
         compress_tp: bool = False,
         profile=None,
+        cache_dtype: Optional[str] = None,
     ):
         self.packed = None
         self.mesh = mesh
@@ -328,6 +339,14 @@ class ContinuousBatcher:
                 quant=dataclasses.replace(cfg.quant, pre_quantized=True)
             )
         self.cfg = cfg = apply_exec_spec(cfg, exec_spec)
+        if cache_dtype is not None:
+            # KV-cache storage precision override (DESIGN.md §13) —
+            # validated by QuantConfig.__post_init__; None keeps the
+            # config's own cache_dtype (default "bf16", bit-identical
+            # to the pre-§13 engine)
+            self.cfg = cfg = cfg.replace(
+                quant=dataclasses.replace(cfg.quant, cache_dtype=cache_dtype)
+            )
         if compress_tp:
             if cfg.quant.mode == "off":
                 raise ValueError(
@@ -564,7 +583,10 @@ class ContinuousBatcher:
             req.generated.append(int(toks[s]))
             self._last_tok[s] = toks[s]
             self.slot_pos[s] += 1
-            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max - 1:
+            # capacity boundary: slot_pos is the NEXT cache write offset,
+            # so decoding may continue while slot_pos <= s_max - 1 (the
+            # last cache slot is usable); `>= s_max - 1` here wasted it
+            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max:
                 req.done = True
                 req.truncated = len(req.generated) < req.max_new
                 self.slot_req[s] = None
@@ -648,7 +670,9 @@ class ContinuousBatcher:
             req.generated.append(tok)
             self._last_tok[s] = tok
             self.slot_pos[s] += 1
-            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max - 1:
+            # same capacity boundary as _step_fused: finish at s_max, not
+            # s_max - 1 (the last cache slot is a legal write target)
+            if len(req.generated) >= req.max_new or self.slot_pos[s] >= self.s_max:
                 req.done = True
                 req.truncated = len(req.generated) < req.max_new
                 self.slot_req[s] = None
@@ -752,17 +776,20 @@ class ContinuousBatcher:
 # ---------------------------------------------------------------------------
 
 from repro.analysis.contracts import (  # noqa: E402
+    PrimRule,
     SkipTrace,
     TraceContract,
     register_trace_contract,
 )
 
 
-def _fused_step_point(quant_mode: str):
+def _fused_step_point(quant_mode: str, cache_dtype: str = "bf16",
+                      s_max: int = 32):
     """Build (fn, args) tracing the production fused decode step on the
-    smoke serving arch under ``quant_mode``. TP variants trace under an
-    installed ("data", "model") mesh, exactly like the engine's
-    ``compress_tp`` scoping."""
+    smoke serving arch under ``quant_mode`` (weights) and ``cache_dtype``
+    (KV cache — DESIGN.md §13). TP variants trace under an installed
+    ("data", "model") mesh, exactly like the engine's ``compress_tp``
+    scoping."""
 
     def build(n_slots: int = 3, tp: int = 1):
         if jax.device_count() < tp:
@@ -774,9 +801,9 @@ def _fused_step_point(quant_mode: str):
         from repro.models.registry import get_config
 
         cfg = get_config("smollm-135m", smoke=True).replace(
-            quant=QuantConfig(mode=quant_mode))
+            quant=QuantConfig(mode=quant_mode, cache_dtype=cache_dtype))
         params = T.init_params(jax.random.PRNGKey(0), cfg)
-        caches = T.init_caches(cfg, n_slots, 32)
+        caches = T.init_caches(cfg, n_slots, s_max)
         step = fused_decode_fn(cfg)
         args = (params, jnp.zeros((n_slots, 1), jnp.int32), caches,
                 jnp.zeros((n_slots,), jnp.int32),
@@ -819,4 +846,61 @@ register_trace_contract(
     _fused_step_point("cim"),
     _FUSED_STEP_CONTRACT,
     axes={"n_slots": (2, 6)},
+)
+
+
+# Quantized KV cache (DESIGN.md §13): the fused step over an int8 cache
+# must never materialize a full-precision copy of the *stacked* cache —
+# dequant stays fused (codes into the contractions, scales onto the
+# score/prob matrices). The per-layer compute-dtype code conversion is
+# inherent to the jnp path (rank-4 int8, one layer's codes at a time);
+# the regression this rule catches is cache-level dequant: an integer
+# code tensor shaped like the *stacked* cache (rank 5 with the
+# contract's s_max at axis 2 — picked to collide with no legitimate
+# dimension of the smoke arch) converted to a float tensor. Matching on
+# the eqn's integer *input* keeps legitimate rank-5 float activations
+# (the GQA score dot_general also carries s_max) out of scope.
+_KVQ_S_MAX = 48
+
+
+def _kvq_stacked_dequant(eqn) -> bool:
+    import numpy as np  # local: predicate must stay import-light
+
+    def stacked(v, pred):
+        aval = getattr(v, "aval", None)
+        return (hasattr(aval, "dtype") and pred(aval.dtype)
+                and len(aval.shape) == 5 and aval.shape[2] == _KVQ_S_MAX)
+
+    # int/uint stacked codes in AND a float tensor of the same stacked
+    # shape out = the cache-level dequant. Control-flow eqns (scan
+    # carries the int8 cache in and float logits out) don't match: their
+    # float outputs are not stacked-cache shaped.
+    if not any(stacked(v, lambda d: d in (np.int8, np.uint8))
+               for v in eqn.invars):
+        return False
+    return any(stacked(v, lambda d: np.issubdtype(d, np.floating))
+               for v in eqn.outvars)
+
+
+register_trace_contract(
+    "serve.fused_decode_step.kvq",
+    _fused_step_point("off", cache_dtype="int8", s_max=_KVQ_S_MAX),
+    TraceContract(
+        max_host_callbacks=0,
+        # int8 codes and ternary-packed uint8 planes both enter the
+        # attention contractions in their stored layout — zero relayout
+        no_pad_on_dtypes=("uint8", "int8"),
+        forbid_prims=(
+            PrimRule(
+                rule="kvq-stacked-dequant",
+                when=_kvq_stacked_dequant,
+                reason="full-precision copy of the stacked quantized KV "
+                       "cache — dequant must stay fused in the attention "
+                       "contractions (DESIGN.md §13)",
+            ),
+        ),
+        # future Pallas attention kernels must accumulate f32
+        accum_dtype="float32",
+    ),
+    axes={"n_slots": (2, 6), "tp": (1, 2)},
 )

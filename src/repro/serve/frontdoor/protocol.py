@@ -229,6 +229,29 @@ async def ws_read_frame(reader: asyncio.StreamReader) -> Tuple[int, bytes]:
     return opcode, payload
 
 
+#: RFC 6455 §7.4.1 close codes the front door uses
+CLOSE_NORMAL, CLOSE_PROTOCOL_ERROR = 1000, 1002
+
+
+def ws_close_frame(code: int = CLOSE_NORMAL, reason: bytes = b"",
+                   *, mask: bool = False) -> bytes:
+    """One close frame with a status code payload (RFC 6455 §5.5.1 —
+    the first two payload bytes are the code, big-endian). The server
+    answers malformed frames with code 1002 before dropping the
+    connection so conforming clients see *why* instead of a bare TCP
+    reset."""
+    return ws_encode_frame(OP_CLOSE, struct.pack(">H", code) + reason,
+                           mask=mask)
+
+
+def ws_close_code(payload: bytes) -> Optional[int]:
+    """Status code of a close-frame payload (None when absent — an
+    empty close payload is legal)."""
+    if len(payload) < 2:
+        return None
+    return struct.unpack(">H", payload[:2])[0]
+
+
 async def ws_send_json(writer: asyncio.StreamWriter, obj: Any,
                        *, mask: bool = False) -> None:
     data = json.dumps(obj, sort_keys=True).encode("utf-8")

@@ -29,11 +29,13 @@ import asyncio
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.serve.frontdoor.protocol import (
+    CLOSE_PROTOCOL_ERROR,
     ProtocolError,
     http_response,
     is_ws_upgrade,
     json_response,
     read_http_request,
+    ws_close_frame,
     ws_handshake_response,
     ws_recv_json,
     ws_send_json,
@@ -252,7 +254,17 @@ class FrontDoor:
                     await ws_send_json(writer, {
                         "type": "error", "error": "bad_request",
                         "detail": f"unknown message type {mtype!r}"})
-        except (ConnectionError, ProtocolError):
+        except ProtocolError:
+            # malformed frame (fragmented, reserved bits, bad opcode,
+            # non-JSON text): tell the peer why with close code 1002
+            # before teardown — the finally below still reclaims the
+            # admission slot of any in-flight request
+            try:
+                writer.write(ws_close_frame(CLOSE_PROTOCOL_ERROR))
+                await writer.drain()
+            except (ConnectionError, RuntimeError):
+                pass
+        except ConnectionError:
             pass
         finally:
             recv.cancel()

@@ -341,3 +341,87 @@ class TestTileDispatch:
         with pytest.raises(ValueError, match="tile"):
             api.autotune(api.CiMExecSpec(formulation="blocked",
                                          backend="jnp"))
+
+    def test_override_context_manager(self):
+        """set_shape_class_override returns a handle restoring the
+        *previous* value on exit — nested and exception-safe — while the
+        historical imperative call keeps working."""
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas",
+                               packing="bitplane_u8")
+        bm_d, _, _ = tiles_for(spec, 2, 256, 128)
+        with set_shape_class_override("prefill"):
+            bm_p, _, _ = tiles_for(spec, 2, 256, 128)
+            assert bm_p > DECODE_M_MAX
+            with set_shape_class_override("decode"):
+                bm_n, _, _ = tiles_for(spec, 256, 256, 128)
+                assert bm_n <= DECODE_M_MAX
+            # inner exit restores the outer override, not None
+            bm_back, _, _ = tiles_for(spec, 2, 256, 128)
+            assert bm_back == bm_p
+        assert tiles_for(spec, 2, 256, 128)[0] == bm_d
+        # exception-safe restore
+        with pytest.raises(RuntimeError):
+            with set_shape_class_override("prefill"):
+                raise RuntimeError("boom")
+        assert tiles_for(spec, 2, 256, 128)[0] == bm_d
+        # imperative style (ignore the handle) still behaves as before
+        set_shape_class_override("prefill")
+        assert tiles_for(spec, 2, 256, 128)[0] > DECODE_M_MAX
+        set_shape_class_override(None)
+        assert tiles_for(spec, 2, 256, 128)[0] == bm_d
+
+    def test_tiles_for_thread_safety(self):
+        """4 threads hammer tiles_for while the override flips and the
+        tile cache is cleared/installed concurrently. Every answer must
+        be a legal resolution for *some* instantaneous global state —
+        never a torn read, KeyError, or RuntimeError from racing dict
+        mutation."""
+        import threading
+
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas",
+                               packing="bitplane_u8")
+        legal = {tuple(tiles_for(spec, 2, 256, 128)),
+                 tuple(tiles_for(spec, 256, 256, 128))}
+        errors, stop = [], threading.Event()
+
+        def reader():
+            try:
+                while not stop.is_set():
+                    got = tiles_for(spec, 2, 256, 128)
+                    if tuple(got) not in legal:
+                        errors.append(f"illegal tiles {got}")
+                        return
+            except Exception as e:  # noqa: BLE001 — recorded for assert
+                errors.append(repr(e))
+
+        def toggler():
+            # sole override writer: concurrent overlapping overrides are
+            # last-exit-wins by design, so only one thread toggles
+            try:
+                while not stop.is_set():
+                    with set_shape_class_override("prefill"):
+                        tiles_for(spec, 2, 256, 128)
+            except Exception as e:  # noqa: BLE001 — recorded for assert
+                errors.append(repr(e))
+
+        def clearer():
+            try:
+                while not stop.is_set():
+                    clear_tile_cache()
+            except Exception as e:  # noqa: BLE001 — recorded for assert
+                errors.append(repr(e))
+
+        threads = [threading.Thread(target=reader) for _ in range(2)]
+        threads += [threading.Thread(target=toggler),
+                    threading.Thread(target=clearer)]
+        for t in threads:
+            t.start()
+        import time as _time
+
+        _time.sleep(0.5)
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not errors, errors
+        # the toggler's last context-manager exit restored the override
+        assert tiles_for(spec, 2, 256, 128)[0] <= DECODE_M_MAX

@@ -513,6 +513,56 @@ class TestFrontDoor:
         assert in_flight == 0
         assert cancelled == 1
 
+    def test_protocol_error_closes_1002_and_frees_slot(self):
+        """A malformed frame (here: fragmented, FIN=0) mid-stream must
+        get a close frame with code 1002 — not a bare TCP reset — and
+        the in-flight request's admission slot must be reclaimed."""
+        cfg, params = setup()
+
+        async def scenario():
+            from repro.serve.frontdoor.client import WSClient
+            from repro.serve.frontdoor.protocol import (
+                OP_CLOSE,
+                ws_close_code,
+                ws_read_frame,
+            )
+
+            door = await _make_door(params, cfg, n_slots=1)
+            try:
+                ws = await WSClient.connect(door.host, door.port)
+                await ws.send({"type": "generate", "prompt": [3, 1, 4],
+                               "max_new": 24})
+                got = 0
+                while got < 2:
+                    m = await ws.recv()
+                    if m["type"] == "token":
+                        got += 1
+                # FIN=0 masked text frame, empty payload: fragmentation
+                # is a deliberate non-goal, the server must refuse it
+                ws.writer.write(bytes([0x01, 0x80, 0, 0, 0, 0]))
+                await ws.writer.drain()
+                # tokens already in flight may arrive first; the close
+                # frame with the protocol-error code must follow
+                code = None
+                for _ in range(100):
+                    opcode, payload = await asyncio.wait_for(
+                        ws_read_frame(ws.reader), timeout=5)
+                    if opcode == OP_CLOSE:
+                        code = ws_close_code(payload)
+                        break
+                for _ in range(2000):
+                    if door.router.in_flight == 0:
+                        break
+                    await asyncio.sleep(0.005)
+                return code, door.router.in_flight, door.tracker.cancelled
+            finally:
+                await door.stop()
+
+        code, in_flight, cancelled = asyncio.run(scenario())
+        assert code == 1002
+        assert in_flight == 0
+        assert cancelled == 1
+
 
 # ---------------------------------------------------------------------------
 # Analysis: the async wrapper leaves the jitted step untouched

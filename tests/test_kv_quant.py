@@ -1,0 +1,318 @@
+"""Quantized KV cache (DESIGN.md §13): bf16 default bit-identity, int8
+fused-vs-generate token identity across serving families, the ternary
+greedy-prefix bound, per-slot capacity gains, TP sharded-cache equality,
+and both halves of the ``serve.fused_decode_step.kvq`` tracing contract.
+
+The accuracy bars, family by family:
+
+  * ``cache_dtype="bf16"`` (default) — **bit-identical** to the pre-§13
+    engine: the jaxpr of the fused step is string-equal under the
+    default config and the explicit knob, and served tokens match
+    per-request ``generate()``.
+  * ``cache_dtype="int8"`` — **token-identical** to ``generate()`` under
+    the same dtype on every family (per-(row, position) scales make the
+    quantization a function of that row's written vector only, so
+    co-batching cannot perturb it).
+  * ``cache_dtype="ternary"`` — token-identical on the dense family;
+    on MLA/hybrid the bar is a **greedy common-prefix bound**: 2-bit
+    codes amplify benign batch-shape rounding differences into late
+    argmax flips, so fused and solo decodes must agree on an initial
+    prefix but may diverge after it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.models.layers import QuantConfig
+from repro.models.registry import get_config
+from repro.serve.engine import ContinuousBatcher, Request, generate
+
+FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "mla": "deepseek-v2-236b",
+    "hybrid": "zamba2-2.7b",
+}
+
+PROMPTS = [[3, 1, 4], [9, 8], [2, 7, 1, 8, 2], [6]]
+MAX_NEWS = [4, 5, 3, 4]
+
+
+def _family_cfg(family, cache_dtype="bf16"):
+    cfg = get_config(FAMILY_ARCHS[family], smoke=True)
+    if family == "mla":
+        cfg = cfg.replace(moe_capacity_factor=8.0)  # no smoke-size drops
+    return cfg.replace(quant=QuantConfig(mode="off", cache_dtype=cache_dtype))
+
+
+def _serve(params, cfg, mesh=None, **kw):
+    b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32, mesh=mesh, **kw)
+    reqs = [Request(i, p, max_new=m) for i, (p, m) in
+            enumerate(zip(PROMPTS, MAX_NEWS))]
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    assert all(r.done for r in reqs)
+    return [r.generated for r in reqs]
+
+
+def _solos(params, cfg):
+    return [
+        np.asarray(generate(params, jnp.asarray([p], jnp.int32), cfg,
+                            max_new=m, s_max=32))[0].tolist()
+        for p, m in zip(PROMPTS, MAX_NEWS)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# bf16 default: bit-identical to the pre-§13 engine
+# ---------------------------------------------------------------------------
+
+
+class TestBF16Default:
+    def test_default_jaxpr_unchanged_by_knob(self):
+        """The fused decode step traces to the *string-identical* jaxpr
+        under the default QuantConfig and the explicit
+        ``cache_dtype="bf16"`` — the knob is a pure no-op until opted
+        into, at trace granularity, not just token granularity."""
+        from repro.serve.engine import _fused_step_point
+
+        jaxprs = {}
+        for label, cd in (("default", None), ("explicit", "bf16")):
+            cfg = get_config("smollm-135m", smoke=True)
+            qc = (QuantConfig(mode="off") if cd is None
+                  else QuantConfig(mode="off", cache_dtype=cd))
+            assert qc.cache_dtype == "bf16"
+            build = _fused_step_point("off", cache_dtype=qc.cache_dtype)
+            f, args = build(n_slots=3)
+            jaxprs[label] = str(jax.make_jaxpr(f)(*args))
+        assert jaxprs["default"] == jaxprs["explicit"]
+
+    @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+    def test_bf16_tokens_match_generate(self, family):
+        cfg = _family_cfg(family)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        assert _serve(params, cfg) == _solos(params, cfg)
+
+    def test_cache_dtype_validated(self):
+        with pytest.raises(ValueError, match="cache_dtype"):
+            QuantConfig(mode="off", cache_dtype="int4")
+
+    def test_engine_kwarg_overrides_config(self):
+        """ContinuousBatcher(cache_dtype=...) rewrites cfg.quant — the
+        serving-time opt-in path the bench sweep drives."""
+        cfg = _family_cfg("dense")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32,
+                              cache_dtype="int8")
+        assert b.cfg.quant.cache_dtype == "int8"
+        caches = T.init_caches(b.cfg, 2, 32)
+        k = jax.tree_util.tree_leaves(caches)[0]
+        assert any(leaf.dtype == jnp.int8
+                   for leaf in jax.tree_util.tree_leaves(caches))
+
+
+# ---------------------------------------------------------------------------
+# int8: token identity fused vs generate, every family
+# ---------------------------------------------------------------------------
+
+
+class TestInt8Identity:
+    @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+    def test_fused_tokens_match_generate(self, family):
+        """The acceptance pin: int8-cached fused serving produces the
+        same tokens as int8-cached per-request generate() — quantization
+        error exists, but it is *identical* between the co-batched and
+        solo decodes (per-row scales, row-local quantization)."""
+        cfg = _family_cfg(family, cache_dtype="int8")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        assert _serve(params, cfg) == _solos(params, cfg)
+
+    def test_cache_leaves_are_int8_with_f32_scales(self):
+        cfg = _family_cfg("dense", cache_dtype="int8")
+        caches = T.init_caches(cfg, 2, 32)
+        for c in caches:
+            if isinstance(c, A.QuantKVCache):
+                assert c.k.dtype == jnp.int8 and c.v.dtype == jnp.int8
+                assert c.k_scale.dtype == jnp.float32
+                assert c.k_scale.shape == c.k.shape[:2]  # per (row, pos)
+
+
+# ---------------------------------------------------------------------------
+# ternary: dense exact, MLA/hybrid greedy-prefix bound
+# ---------------------------------------------------------------------------
+
+
+class TestTernary:
+    def test_dense_tokens_match_generate(self):
+        cfg = _family_cfg("dense", cache_dtype="ternary")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        assert _serve(params, cfg) == _solos(params, cfg)
+
+    @pytest.mark.parametrize("family", ["mla", "hybrid"])
+    def test_greedy_prefix_bound(self, family):
+        """2-bit codes amplify benign batch-shape float differences into
+        late greedy flips — fused and solo must still agree on an
+        initial prefix of every request (full divergence would mean a
+        real cache bug, not rounding)."""
+        cfg = _family_cfg(family, cache_dtype="ternary")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        served = _serve(params, cfg)
+        solos = _solos(params, cfg)
+        for got, want in zip(served, solos):
+            prefix = 0
+            for a, b in zip(got, want):
+                if a != b:
+                    break
+                prefix += 1
+            assert prefix >= 2, (family, got, want)
+
+    def test_pack_unpack_round_trip(self):
+        t = jnp.asarray(np.random.default_rng(0).integers(-1, 2, (3, 8)),
+                        jnp.int8)
+        p = A.pack_ternary_kv(t)
+        assert p.dtype == jnp.uint8 and p.shape == (3, 4)
+        np.testing.assert_array_equal(
+            np.asarray(A.unpack_ternary_kv(p, jnp.float32)), np.asarray(t))
+
+    def test_odd_last_dim_rejected(self):
+        with pytest.raises(ValueError, match="odd"):
+            A.QuantKVCache.zeros(2, 8, 2, 15, cache_dtype="ternary")
+
+
+# ---------------------------------------------------------------------------
+# capacity: per-slot cache bytes shrink by ~2x (int8) / ~3.2x (ternary)
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_bytes(cfg, n_slots=2, s_max=32):
+    # dense arch: the whole cache pytree IS the (stacked) attention cache
+    caches = T.init_caches(cfg, n_slots, s_max)
+    assert isinstance(caches, (A.KVCache, A.QuantKVCache))
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(caches))
+
+
+class TestCapacity:
+    def test_per_slot_bytes_ratio(self):
+        """Equal cache memory fits more slots: per-slot attention-cache
+        bytes must shrink by the documented ratios. With per-position
+        f32 scales the exact ratio is 4D/(2D+8) for int8 and 4D/(D+8)
+        for ternary, D = n_kv*head_dim bytes per position per tensor —
+        1.78x / 3.2x at the smoke arch's D=32, asymptotically 2x / 4x
+        at production head counts (DESIGN.md §13)."""
+        bytes_by_cd = {
+            cd: _attn_cache_bytes(_family_cfg("dense", cache_dtype=cd))
+            for cd in ("bf16", "int8", "ternary")
+        }
+        assert bytes_by_cd["bf16"] / bytes_by_cd["int8"] >= 1.7
+        assert bytes_by_cd["bf16"] / bytes_by_cd["ternary"] >= 3.0
+
+    def test_ssm_state_stays_exact(self):
+        """Quantization applies to attention KV only — SSM recurrent
+        state stays full precision (it is rewritten every step; scale
+        drift would compound)."""
+        cfg = get_config("mamba2-780m", smoke=True).replace(
+            quant=QuantConfig(mode="off", cache_dtype="int8"))
+        caches = T.init_caches(cfg, 2, 32)
+        for leaf in jax.tree_util.tree_leaves(caches):
+            assert leaf.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# TP: sharded quantized caches serve identically
+# ---------------------------------------------------------------------------
+
+
+class TestTPSharding:
+    def test_tp_int8_tokens_match_unsharded(self, tp_mesh):
+        """int8 cached serving under TP={1,2} == the unsharded engine,
+        token by token — sharding the cache's sequence dim changes where
+        the codes live, not what they decode to."""
+        from repro.launch.mesh import make_tp_mesh
+
+        cfg = _family_cfg("dense", cache_dtype="int8")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        base = _serve(params, cfg, None)
+        for tp in (1, 2):
+            assert _serve(params, cfg, make_tp_mesh(tp)) == base, tp
+
+    def test_tp_ternary_serves_deterministically(self, tp_mesh):
+        """Ternary under TP=2: the GSPMD partitioning reassociates the
+        score reductions, which 2-bit codes amplify into greedy flips vs
+        the unsharded engine (same bar as fused-vs-generate:
+        prefix-bound, not equality). What IS pinned: the sharded run is
+        deterministic, complete, and in-vocab."""
+        from repro.launch.mesh import make_tp_mesh
+
+        cfg = _family_cfg("dense", cache_dtype="ternary")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        a = _serve(params, cfg, make_tp_mesh(2))
+        b = _serve(params, cfg, make_tp_mesh(2))
+        assert a == b
+        for toks, m in zip(a, MAX_NEWS):
+            assert len(toks) == m
+            assert all(0 <= t < cfg.vocab for t in toks)
+
+    def test_cache_specs_cover_quantized_leaves(self, tp_mesh):
+        """The generic cache_specs rule (first trailing dim divisible by
+        the model size shards) applies unchanged to quantized leaves:
+        int8 code tensors AND their per-(row, position) scale tensors
+        both split on the sequence dim — each device stores half the
+        codes and the matching half of the scales (smaller TP cache
+        shards, satellite of DESIGN.md §13)."""
+        from repro.dist.sharding import cache_specs
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(2)
+        cfg = _family_cfg("dense", cache_dtype="int8")
+        caches = T.init_caches(cfg, 2, 32)
+        specs = cache_specs(caches, mesh, batch=2)
+        assert isinstance(caches, A.QuantKVCache)
+        # stacked leaves are (L, B, S, ...): the sequence dim shards
+        assert tuple(specs.k)[2] == "model"
+        assert tuple(specs.k_scale)[2] == "model"
+        assert tuple(specs.v)[2] == "model"
+        assert tuple(specs.v_scale)[2] == "model"
+
+
+# ---------------------------------------------------------------------------
+# The kvq tracing contract: positive and negative halves
+# ---------------------------------------------------------------------------
+
+
+class TestKVQContract:
+    def test_contract_clean(self, tp_mesh):
+        """The registered contract over the real fused int8 step: zero
+        findings, every (n_slots, tp) combination traced live."""
+        from repro.analysis import run_contract
+
+        findings, meta = run_contract("serve.fused_decode_step.kvq")
+        assert not findings, findings
+        assert not meta["skipped"], meta
+
+    def test_stacked_dequant_trips_rule(self):
+        """Sensitivity: a step that dequantizes the stacked cache up
+        front (the exact regression the rule guards against) must be
+        flagged — the auditor is not vacuously green."""
+        from repro.analysis import check_jaxpr, get_trace_contract
+        from repro.serve.engine import _KVQ_S_MAX, _fused_step_point
+
+        point = get_trace_contract("serve.fused_decode_step.kvq")
+        step, args = _fused_step_point(
+            "off", cache_dtype="int8", s_max=_KVQ_S_MAX)(n_slots=2, tp=1)
+
+        def bad_step(params, toks, caches, pos, starts, key):
+            def roundtrip(leaf):
+                if leaf.dtype == jnp.int8:
+                    # materializes the rank-5 float cache copy
+                    return leaf.astype(jnp.float32).astype(jnp.int8)
+                return leaf
+            caches = jax.tree_util.tree_map(roundtrip, caches)
+            return step(params, toks, caches, pos, starts, key)
+
+        closed = jax.make_jaxpr(bad_step)(*args)
+        hits = check_jaxpr(closed, point.contract, "kvq.negative")
+        assert any(f.rule == "kvq-stacked-dequant" for f in hits), hits

@@ -223,6 +223,25 @@ class TestContinuousBatcher:
         for r in (long_r, short_r):
             assert r.done and r.truncated and len(r.generated) < r.max_new
 
+    def test_capacity_boundary_exact_one_decode_token(self):
+        """Boundary pin for the slot-capacity check: a prompt of length
+        s_max - 1 fills the cache up to the last position at prefill
+        (slot_pos = s_max - 1 after the prompt writes), leaving room for
+        exactly ONE decode write. The request must produce the prefill
+        token plus exactly one decode token — two generated total — and
+        finish truncated. The historical `slot_pos >= s_max - 1` finish
+        check retired the slot a step early and silently wasted that
+        last cache line."""
+        cfg, params = setup()
+        for fused in (True, False):
+            b = ContinuousBatcher(params, cfg, n_slots=2, s_max=16,
+                                  fused=fused)
+            r = Request(0, list(range(1, 16)), max_new=8)  # len 15 == s_max-1
+            b.submit(r)
+            b.run()
+            assert r.done and r.truncated, (fused, r.done, r.truncated)
+            assert len(r.generated) == 2, (fused, r.generated)
+
     def test_temperature_sampling_runs_on_device(self):
         cfg, params = setup()
         b = ContinuousBatcher(params, cfg, n_slots=2, s_max=32, temperature=0.8,
