@@ -72,8 +72,11 @@ def run(csv: bool = True, out: str = "BENCH_array.json"):
         print(",".join(keys))
         for r in rs:
             print(",".join(str(r[k]) for k in keys))
+    from repro.profile import backend_block
+
     result = {
         "bench": "array",
+        "backend": backend_block(),
         "technologies": list(hw.technologies()),
         "designs": list(hw.designs()),
         "rows": rs,

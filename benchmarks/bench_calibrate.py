@@ -218,7 +218,7 @@ def run(smoke: bool = True, archs=("smollm-135m", "mamba2-780m"),
     result = {
         "bench": "calibrate",
         "smoke": smoke,
-        "backend": jax.default_backend(),
+        "backend": P.backend_block(),
         "error_bound_pct": bound,
         "kernel_sweep": {
             "specs": swept,
@@ -254,6 +254,13 @@ def validate_result(d) -> None:
             raise ValueError(f"BENCH_calib.json missing field {field!r}")
     if d["bench"] != "calibrate":
         raise ValueError(f"bench field is {d['bench']!r}, not 'calibrate'")
+    b = d["backend"]
+    if not isinstance(b, dict) or not all(
+            f in b for f in ("platform", "device_kind", "device_count",
+                             "interpret")):
+        raise ValueError(
+            f"backend must be the provenance block (platform/device_kind/"
+            f"device_count/interpret), got {b!r}")
     table = P.CalibrationTable.from_json(d["table"])  # version + layout check
     if not table.kernels:
         raise ValueError("calibration table has no kernel fits")

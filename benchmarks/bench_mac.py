@@ -21,14 +21,25 @@ through the tiled (pallas) backend and reports per row:
   * ``bit_identical``    — new path vs the jnp oracle, and (decode
                            rows) new vs pre-pad path, exact equality
 
+With ``--stream`` the sweep adds the double-buffered streaming decode
+kernel (``pallas_stream`` backend — DESIGN.md §14): per packed row a
+``backend="pallas_stream"`` twin timed on the same operands, reporting
+``stream_vs_decode`` (non-stream decode time / stream time) and folding
+the stream-vs-decode bit-equality into ``bit_identical``.
+
 Off-TPU the pallas kernels run in interpret mode, so absolute numbers
 are not TPU numbers — the old-vs-new ratio on identical shapes is the
-portable signal (the interpreter pays per padded row too). Emits
-``BENCH_mac.json`` (CI validates and uploads it; the README perf table
-row comes from a full run).
+portable signal (the interpreter pays per padded row too), and for the
+stream rows only the **bit-identity** is load-bearing (the interpreter
+serializes the DMA overlap the kernel exists for). The ``backend``
+block records platform/device/interpret-flag provenance;
+:func:`validate_result` refuses any ``compiled_speedup`` claim made
+under interpret mode. Emits ``BENCH_mac.json`` (CI validates and
+uploads it; the README perf table row comes from a full run).
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.bench_mac [--full] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.bench_mac [--full] [--stream]
+        [--out PATH]
 """
 from __future__ import annotations
 
@@ -43,6 +54,7 @@ import numpy as np
 from repro import api
 from repro.core import ternary as tern
 from repro.core.execution import set_shape_class_override, shape_class
+from repro.profile import backend_block
 
 MS = (1, 4, 8, 128, 512)
 REPEATS = 5
@@ -65,9 +77,10 @@ def _time(fn, repeats=REPEATS):
     return float(np.min(times) * 1e6)
 
 
-def _row(m, k, n, formulation, packed, x, w, p1, p2, oracle):
+def _row(m, k, n, formulation, packed, x, w, p1, p2, oracle,
+         backend="pallas"):
     spec = api.CiMExecSpec(
-        formulation=formulation, backend="pallas",
+        formulation=formulation, backend=backend,
         packing="bitplane_u8" if packed else "none",
     )
     if packed:
@@ -83,6 +96,7 @@ def _row(m, k, n, formulation, packed, x, w, p1, p2, oracle):
         "k": k,
         "n": n,
         "formulation": formulation,
+        "backend": backend,
         "packing": spec.packing,
         "shape_class": shape_class(m),
         "us": round(us, 2),
@@ -103,7 +117,7 @@ def _row(m, k, n, formulation, packed, x, w, p1, p2, oracle):
     return row
 
 
-def run(smoke: bool = True, out: str = "BENCH_mac.json"):
+def run(smoke: bool = True, stream: bool = False, out: str = "BENCH_mac.json"):
     k, n = (256, 256) if smoke else (2048, 2048)
     key = jax.random.PRNGKey(0)
     kw, kx = jax.random.split(key)
@@ -126,12 +140,32 @@ def run(smoke: bool = True, out: str = "BENCH_mac.json"):
                 print(f"[bench_mac] {tag} {r['us']:>10.1f}us  "
                       f"{r['weight_gbs']:>8.3f} GB/s  "
                       f"bit_identical={r['bit_identical']}{extra}")
-    decode_rows = [r for r in rows if r["shape_class"] == "decode"]
+                if stream and packed:
+                    base = r
+                    sr = _row(m, k, n, formulation, packed,
+                              x, w, p1, p2, oracle, backend="pallas_stream")
+                    sr["stream_vs_decode"] = round(
+                        base["us"] / max(sr["us"], 1e-9), 2)
+                    # stream output must equal the non-stream packed
+                    # path bit for bit — re-run both on the same
+                    # operands (outputs above were already compared to
+                    # the jnp oracle, so equal oracles ⇒ equal outputs;
+                    # keep the direct check anyway for the negative
+                    # space where only one path drifts)
+                    sr["bit_identical"] = sr["bit_identical"] and bool(
+                        base["bit_identical"])
+                    rows.append(sr)
+                    print(f"[bench_mac] {tag.replace(formulation, 'stream'):<28}"
+                          f" {sr['us']:>10.1f}us  "
+                          f"stream_vs_decode={sr['stream_vs_decode']}x  "
+                          f"bit_identical={sr['bit_identical']}")
+    decode_rows = [r for r in rows if r["shape_class"] == "decode"
+                   and r["backend"] == "pallas"]
+    stream_rows = [r for r in rows if r["backend"] == "pallas_stream"]
     result = {
         "bench": "mac",
         "smoke": smoke,
-        "backend": jax.default_backend(),
-        "interpret": jax.default_backend() != "tpu",
+        "backend": backend_block(),
         "k": k,
         "n": n,
         "block": 16,
@@ -141,6 +175,20 @@ def run(smoke: bool = True, out: str = "BENCH_mac.json"):
         "decode_speedup_min": min(r["speedup_vs_prepad"] for r in decode_rows),
         "all_bit_identical": all(r["bit_identical"] for r in rows),
     }
+    if stream:
+        ratios = [r["stream_vs_decode"] for r in stream_rows
+                  if "stream_vs_decode" in r]
+        result["stream"] = {
+            "rows": len(stream_rows),
+            "ratio_min": min(ratios),
+            "ratio_max": max(ratios),
+            "bit_identical": all(r["bit_identical"] for r in stream_rows),
+        }
+        if not result["backend"]["interpret"]:
+            # a compiled run may state the overlap win as a claim;
+            # validate_result refuses this field under interpret mode
+            result["stream"]["compiled_speedup"] = result["stream"]["ratio_min"]
+    validate_result(result)
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"[bench_mac] decode speedup vs pre-pad path: "
@@ -148,6 +196,73 @@ def run(smoke: bool = True, out: str = "BENCH_mac.json"):
           f" (bit-identical: {result['all_bit_identical']})")
     print(f"[bench_mac] wrote {out}")
     return result
+
+
+_ROW_FIELDS = ("m", "k", "n", "formulation", "backend", "packing",
+               "shape_class", "us", "weight_gbs", "bit_identical")
+
+_BACKEND_FIELDS = ("platform", "device_kind", "device_count", "interpret")
+
+
+def validate_result(d) -> None:
+    """Schema + honesty gate for BENCH_mac.json (CI runs this on fresh
+    smoke output and on the committed artifact). Raises ValueError on
+    malformation, on any row that is not bit-identical to its oracle
+    (the fast paths must never trade bits for time), and on any
+    compiled-speedup claim made under interpret mode — interpret
+    timings prove plumbing, not speed."""
+    for field in ("bench", "smoke", "backend", "k", "n", "block", "adc_max",
+                  "rows", "decode_speedup_max", "decode_speedup_min",
+                  "all_bit_identical"):
+        if field not in d:
+            raise ValueError(f"BENCH_mac.json missing field {field!r}")
+    if d["bench"] != "mac":
+        raise ValueError(f"bench field is {d['bench']!r}, not 'mac'")
+    b = d["backend"]
+    if not isinstance(b, dict):
+        raise ValueError("backend must be the provenance block "
+                         f"{list(_BACKEND_FIELDS)}, got {b!r}")
+    for field in _BACKEND_FIELDS:
+        if field not in b:
+            raise ValueError(f"backend block missing {field!r}")
+    if not d["rows"]:
+        raise ValueError("no rows")
+    for i, r in enumerate(d["rows"]):
+        for field in _ROW_FIELDS:
+            if field not in r:
+                raise ValueError(f"rows[{i}] missing {field!r}")
+        if r["us"] <= 0 or r["weight_gbs"] <= 0:
+            raise ValueError(f"rows[{i}] has non-positive timing: {r}")
+        if not r["bit_identical"]:
+            raise ValueError(
+                f"rows[{i}] is not bit-identical to its oracle: {r}")
+        if r["shape_class"] == "decode" and r["backend"] == "pallas":
+            if "speedup_vs_prepad" not in r or r["speedup_vs_prepad"] <= 0:
+                raise ValueError(f"decode rows[{i}] missing a positive "
+                                 f"speedup_vs_prepad: {r}")
+        if r["backend"] == "pallas_stream" and "stream_vs_decode" in r:
+            if r["stream_vs_decode"] <= 0:
+                raise ValueError(f"rows[{i}] non-positive stream ratio: {r}")
+    if not d["all_bit_identical"]:
+        raise ValueError("all_bit_identical is false")
+    stream = d.get("stream")
+    if stream is not None:
+        for field in ("rows", "ratio_min", "ratio_max", "bit_identical"):
+            if field not in stream:
+                raise ValueError(f"stream block missing {field!r}")
+        if not stream["bit_identical"]:
+            raise ValueError("stream rows are not bit-identical to the "
+                             "non-stream decode path")
+    if b["interpret"]:
+        claims = [k for k in ("compiled_speedup",)
+                  if k in d or (stream is not None and k in stream)
+                  or any(k in r for r in d["rows"])]
+        if claims:
+            raise ValueError(
+                f"compiled-speedup claim(s) {claims} under interpret mode "
+                "(backend block says interpret=true) — interpret timings "
+                "prove bit-exactness, never compiled speed; re-run on a "
+                "real TPU to state this")
 
 
 def main(argv=None):
@@ -159,9 +274,12 @@ def main(argv=None):
     size.add_argument("--full", dest="smoke", action="store_false",
                       help="full-size K/N sweep")
     ap.set_defaults(smoke=True)
+    ap.add_argument("--stream", action="store_true",
+                    help="add pallas_stream (double-buffered DMA decode "
+                         "kernel) twin rows for every packed row")
     ap.add_argument("--out", default="BENCH_mac.json")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, out=args.out)
+    run(smoke=args.smoke, stream=args.stream, out=args.out)
     return 0
 
 

@@ -62,6 +62,7 @@ import jax
 
 from repro.models import transformer as T
 from repro.models.registry import get_config
+from repro.profile import backend_block as _backend_block
 from repro.serve.engine import ContinuousBatcher, Request
 
 
@@ -192,7 +193,7 @@ def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         "n_slots": n_slots,
         "s_max": s_max,
         "n_requests": n_requests,
-        "backend": jax.default_backend(),
+        "backend": _backend_block(),
         "fused": fused,
         "looped": looped,
         "speedup_fused_over_looped": round(

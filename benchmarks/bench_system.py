@@ -102,8 +102,11 @@ def run(csv: bool = True, out: str = "BENCH_system.json"):
         print("\n" + ",".join(pkeys))
         for r in pr:
             print(",".join(str(r[k]) for k in pkeys))
+    from repro.profile import backend_block
+
     result = {
         "bench": "system",
+        "backend": backend_block(),
         "technologies": list(hw.technologies()),
         "rows": rs,
         "projections": pr,

@@ -71,8 +71,18 @@ import jax
 
 from repro.models import transformer as T
 from repro.models.registry import get_config
-from repro.profile.replay import ReplayRequest, poisson_requests
+from repro.profile import backend_block
+from repro.profile.replay import (
+    ReplayRequest,
+    poisson_requests,
+    replay_traffic_bench,
+)
 from repro.serve.frontdoor.client import WSClient, http_json
+
+#: stated predicted-vs-measured bound for the replay_check block: the
+#: committed row's goodput and TTFT must be reproducible from its own
+#: stated segment times through replay.simulate within this error
+REPLAY_ERROR_BOUND_PCT = 35.0
 
 
 def _prompt_for(rid: int, prompt_len: int, vocab: int) -> List[int]:
@@ -211,7 +221,7 @@ def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         "bench": "traffic",
         "arch": arch,
         "smoke": smoke,
-        "backend": jax.default_backend(),
+        "backend": backend_block(),
         "n_slots": n_slots,
         "s_max": s_max,
         "queue_limit": queue_limit,
@@ -219,12 +229,24 @@ def run(smoke: bool = True, arch: str = "smollm-135m", n_slots: int = 4,
         "step_pace_us": pace_us,
         "seed": seed,
         "n_requests": n_requests,
+        "max_new": max_new,
         "rows": rows,
         "tokens_client_eq_server": tokens_agree,
         "goodput_2r_gt_1r": bool(replicas_max > 1 and g2 > g1),
         "validated": bool(
             tokens_agree and fused_ok
             and (replicas_max == 1 or g2 > g1)),
+    }
+    # close the predicted-vs-measured loop: the artifact must be
+    # reproducible from its own stated segment times through
+    # replay.simulate, within the stated bound (DESIGN.md §11)
+    _, cmp = replay_traffic_bench(result, "1")
+    result["replay_check"] = {
+        "error_bound_pct": REPLAY_ERROR_BOUND_PCT,
+        **cmp,
+        "within_bound": bool(
+            cmp["goodput_error_pct"] <= REPLAY_ERROR_BOUND_PCT
+            and cmp["ttft_error_pct"] <= REPLAY_ERROR_BOUND_PCT),
     }
     validate_result(result)
     with open(out, "w") as f:
@@ -251,12 +273,19 @@ def validate_result(d) -> None:
     add goodput must not ship."""
     for field in ("bench", "arch", "smoke", "backend", "n_slots", "s_max",
                   "queue_limit", "rate_rps", "step_pace_us", "seed",
-                  "n_requests", "rows", "tokens_client_eq_server",
-                  "goodput_2r_gt_1r", "validated"):
+                  "n_requests", "max_new", "rows", "tokens_client_eq_server",
+                  "goodput_2r_gt_1r", "replay_check", "validated"):
         if field not in d:
             raise ValueError(f"BENCH_traffic.json missing field {field!r}")
     if d["bench"] != "traffic":
         raise ValueError(f"bench field is {d['bench']!r}, not 'traffic'")
+    b = d["backend"]
+    if not isinstance(b, dict) or not all(
+            f in b for f in ("platform", "device_kind", "device_count",
+                             "interpret")):
+        raise ValueError(
+            f"backend must be the provenance block (platform/device_kind/"
+            f"device_count/interpret), got {b!r}")
     rows = d["rows"]
     if "1" not in rows:
         raise ValueError("no 1-replica row")
@@ -283,6 +312,20 @@ def validate_result(d) -> None:
         gmax = rows[str(max(int(k) for k in rows))]["goodput_tok_s"]
         if d["goodput_2r_gt_1r"] != (gmax > g1):
             raise ValueError("goodput_2r_gt_1r inconsistent with rows")
+    rc = d["replay_check"]
+    for field in ("error_bound_pct", "goodput_error_pct", "ttft_error_pct",
+                  "within_bound"):
+        if field not in rc:
+            raise ValueError(f"replay_check missing {field!r}")
+    bound = float(rc["error_bound_pct"])
+    if rc["goodput_error_pct"] > bound or rc["ttft_error_pct"] > bound:
+        raise ValueError(
+            f"replay_check: predicted-vs-measured error exceeds the stated "
+            f"{bound}% bound (goodput {rc['goodput_error_pct']}%, ttft "
+            f"{rc['ttft_error_pct']}%) — the artifact is not reproducible "
+            f"from its own segment times")
+    if not rc["within_bound"]:
+        raise ValueError("replay_check.within_bound is False")
     if not d["validated"]:
         raise ValueError("run not validated (goodput did not scale with "
                          "replicas, or an invariant failed)")

@@ -115,6 +115,13 @@ class TraceContract:
     accum_dtype: every ``dot_general`` inside a Pallas kernel body must
       accumulate (``preferred_element_type``) in exactly this dtype.
     max_eqns: optional hard cap on the recursive equation count.
+    pin_prims: ``((prim_name, exact_count), ...)`` — the recursive
+      equation walk must contain *exactly* this many equations of each
+      named primitive. This is how the streaming decode contract pins
+      its DMA structure (``dma_start``/``dma_wait`` counts): the counts
+      depend on the kernel's buffer rotation, not on grid size, so a
+      kernel that stops prefetching (or starts blocking per tile)
+      changes the pinned count before any benchmark notices.
 
     Equation-count *invariance* axes live on the :class:`TracePoint`
     (they parameterize the builder, not the rule set).
@@ -126,6 +133,7 @@ class TraceContract:
     forbid_dtype_shapes: Tuple[Tuple[str, Tuple[int, ...]], ...] = ()
     accum_dtype: Optional[str] = None
     max_eqns: Optional[int] = None
+    pin_prims: Tuple[Tuple[str, int], ...] = ()
 
 
 class SkipTrace(Exception):

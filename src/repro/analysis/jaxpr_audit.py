@@ -126,10 +126,13 @@ def check_jaxpr(closed, contract: TraceContract, where: str) -> List[Finding]:
                              where=where, message=message))
 
     callbacks = 0
+    pinned = {name: 0 for name, _ in contract.pin_prims}
     for eqn, within in iter_eqns(jaxpr):
         prim = eqn.primitive.name
         if prim in HOST_CALLBACK_PRIMS:
             callbacks += 1
+        if prim in pinned:
+            pinned[prim] += 1
         if contract.no_pad_on_dtypes and prim == "pad":
             hits = [_aval_str(v) for v in eqn.invars
                     if str(getattr(getattr(v, "aval", None), "dtype", ""))
@@ -175,6 +178,12 @@ def check_jaxpr(closed, contract: TraceContract, where: str) -> List[Finding]:
     n = total_eqns(jaxpr)
     if contract.max_eqns is not None and n > contract.max_eqns:
         emit("max-eqns", f"{n} equations > contract cap {contract.max_eqns}")
+    for prim_name, expect in contract.pin_prims:
+        if pinned[prim_name] != expect:
+            emit("prim-count",
+                 f"{pinned[prim_name]} {prim_name} eqn(s) in the traced "
+                 f"program, contract pins exactly {expect} — the DMA/"
+                 f"prefetch structure this count encodes has changed")
     # dedupe (identical sub-jaxprs can repeat a message) keeping order
     seen, unique = set(), []
     for f in found:

@@ -29,6 +29,7 @@ from repro.core.execution import (  # noqa: F401
     clear_tile_cache,
     execute,
     execute_packed,
+    execute_packed_tp,
     execute_tp,
     get_backend,
     register_backend,

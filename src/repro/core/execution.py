@@ -43,10 +43,11 @@ Built-in formulations:
 
 Backends: ``jnp`` lowers everywhere (CPU, autodiff tracing, pjit);
 ``pallas`` uses the TPU kernels in repro.kernels (interpret mode off
-TPU); ``auto`` resolves to pallas on TPU else jnp. Packing
-``bitplane_u8`` stores weights as two packed uint8 bitplanes, 2 bits per
-ternary weight (the memory-macro layout; 8x less HBM weight traffic than
-int8).
+TPU); ``pallas_stream`` is the double-buffered streaming decode variant
+(plane DMA overlapped with the MAC — DESIGN.md §14); ``auto`` resolves
+to pallas on TPU else jnp. Packing ``bitplane_u8`` stores weights as two
+packed uint8 bitplanes, 2 bits per ternary weight (the memory-macro
+layout; 8x less HBM weight traffic than int8).
 
 Shape-aware dispatch (DESIGN.md §9): pallas registry entries carry a
 *tile table* — ``(bm, bk, bn)`` as a function of (M, K, N) — with a
@@ -71,7 +72,11 @@ import jax.numpy as jnp
 
 from repro.core import ternary as tern
 from repro.kernels import ref
-from repro.kernels.packed_mac import packed_cim_matmul, packed_cim_matmul_decode
+from repro.kernels.packed_mac import (
+    packed_cim_matmul,
+    packed_cim_matmul_decode,
+    packed_cim_matmul_decode_stream,
+)
 from repro.kernels.ternary_mac import ternary_cim_matmul, ternary_exact_matmul
 
 FORMULATIONS = ("exact", "blocked", "corrected", "bitplane", "fused")
@@ -176,7 +181,13 @@ class BackendEntry:
     # (m, k, n) -> (bm, bk, bn) tile table; None = kernel has no tiling
     # dimension (jnp formulations). When set, ``fn`` takes a 4th ``tiles``
     # argument and the shim resolves it via tiles_for outside the jit.
-    tiles: Optional[Callable[[int, int, int], Tuple[int, int, int]]] = None
+    # Streaming entries return 4-tuples (bm, bk, bn, nbuf) — nbuf is the
+    # VMEM buffer depth of the DMA double buffer.
+    tiles: Optional[Callable[[int, int, int], Tuple[int, ...]]] = None
+    # per-shape-class autotune candidates overriding the global
+    # _TILE_CANDIDATES (entries whose tile tuples carry extra dimensions
+    # — e.g. the stream backend's buffer depth — sweep their own grid)
+    tile_candidates: Optional[Dict[str, Tuple[Tuple[int, ...], ...]]] = None
 
 
 _REGISTRY: Dict[Tuple[str, str, str], BackendEntry] = {}
@@ -195,7 +206,8 @@ def _parse_key(name) -> Tuple[str, str, str]:
 
 
 def register_backend(name, fn: Callable, *, clamps: bool = True,
-                     tiles: Optional[Callable] = None) -> None:
+                     tiles: Optional[Callable] = None,
+                     tile_candidates: Optional[Dict] = None) -> None:
     """Register a MAC kernel under a ``"formulation/backend/packing"``
     key (or an equivalent 3-tuple). ``fn(x2d, w_t, spec)`` receives the
     flattened (M, K) inputs with K padded to the block/packing
@@ -207,11 +219,15 @@ def register_backend(name, fn: Callable, *, clamps: bool = True,
     tiled (pallas) kernels. When given, ``fn`` is called as
     ``fn(x2d, w_t, spec, tiles)`` with the resolved tile triple (an
     autotuned winner when one is cached, else the table's answer for the
-    call's shape class — see :func:`tiles_for`)."""
+    call's shape class — see :func:`tiles_for`).
+
+    ``tile_candidates``: optional per-shape-class candidate grid for
+    :func:`autotune` (entries with non-standard tile tuples — the stream
+    backend's ``(bm, bk, bn, nbuf)`` — own their sweep)."""
     key = _parse_key(name)
     if key[1] == "auto":
         raise ValueError("register concrete backends, not 'auto'")
-    _REGISTRY[key] = BackendEntry(fn, bool(clamps), tiles)
+    _REGISTRY[key] = BackendEntry(fn, bool(clamps), tiles, tile_candidates)
 
 
 def get_backend(spec: CiMExecSpec) -> BackendEntry:
@@ -344,9 +360,22 @@ _TILE_CANDIDATES: Dict[str, Tuple[Tuple[int, int, int], ...]] = {
                 (256, 256, 128), (128, 256, 256)),
 }
 
+# the stream backend's own grid: the 4th element is the VMEM buffer
+# depth nbuf ∈ {2, 3} of the DMA double/triple buffer (prefill rows
+# delegate to the non-stream prefill kernel, so only tiles matter there)
+_STREAM_TILE_CANDIDATES: Dict[str, Tuple[Tuple[int, ...], ...]] = {
+    "decode": ((8, 128, 128, 2), (8, 256, 128, 2), (8, 256, 128, 3),
+               (8, 512, 128, 2), (8, 512, 128, 3), (8, 256, 256, 2)),
+    "prefill": ((128, 256, 128, 2), (128, 512, 128, 2), (128, 256, 256, 2)),
+}
 
-def _tiles_valid(spec: CiMExecSpec, tiles: Tuple[int, int, int]) -> bool:
-    bm, bk, bn = tiles
+
+def _tiles_valid(spec: CiMExecSpec, tiles: Tuple[int, ...]) -> bool:
+    if len(tiles) not in (3, 4):
+        return False
+    bm, bk, bn = tiles[:3]
+    if len(tiles) == 4 and tiles[3] not in (2, 3):
+        return False  # stream buffer depth: double or triple buffering
     if spec.packing == "bitplane_u8":
         return bk % (8 * spec.block) == 0  # whole packed bytes, whole blocks
     return bk % spec.block == 0  # the ADC clamp never straddles a K tile
@@ -370,6 +399,11 @@ def autotune(
     recorded winners for ``spec`` are validated and installed directly —
     replaying a past autotune instead of re-measuring on a possibly
     noisy host.
+
+    Entries with their own candidate grids (``tile_candidates`` on the
+    registry entry) sweep those instead of the global table — the
+    ``pallas_stream`` backend's grid includes the DMA buffer depth
+    ``nbuf`` ∈ {2, 3} as a 4th tile element.
 
     Returns ``{shape_class: {"tiles": winner, "us": best_us,
     "candidates": {"bmxbkxbn": us}}}``. Raises for untiled backends —
@@ -398,7 +432,7 @@ def autotune(
             if cls not in SHAPE_CLASSES:
                 raise ValueError(f"unknown shape class {cls!r} in calibration")
             tiles = tuple(int(t) for t in tiles)
-            if len(tiles) != 3 or not _tiles_valid(spec, tiles):
+            if not _tiles_valid(spec, tiles):
                 raise ValueError(
                     f"calibrated tiles {tiles} invalid for {spec.name} "
                     f"(block={spec.block})"
@@ -427,7 +461,7 @@ def autotune(
             def run(tiles):
                 return _jit_execute(spec, tiles, x, w)
 
-        cands = (candidates or _TILE_CANDIDATES)[cls]
+        cands = (candidates or entry.tile_candidates or _TILE_CANDIDATES)[cls]
         timings: Dict[str, float] = {}
         best: Optional[Tuple[int, int, int]] = None
         for tiles in cands:
@@ -477,9 +511,9 @@ def canonical_plane_layout(spec: CiMExecSpec) -> Tuple[int, int]:
     # that scale tiles with the shape answer for the unclamped regime
     big = 1 << 20
     for m in (1, 128):
-        _, bk, bn = entry.tiles(m, big, big)
-        k_mult = math.lcm(k_mult, max(int(bk), 1))
-        n_mult = math.lcm(n_mult, max(int(bn), 1))
+        t = entry.tiles(m, big, big)  # (bm, bk, bn[, nbuf])
+        k_mult = math.lcm(k_mult, max(int(t[1]), 1))
+        n_mult = math.lcm(n_mult, max(int(t[2]), 1))
     return k_mult, n_mult
 
 
@@ -675,6 +709,27 @@ def _packed_forward(spec, tiles, x, w_pos, w_neg, n_out):
     return out[:, :n_out].reshape(lead + (n_out,)).astype(x.dtype)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _packed_stream_forward(spec, tiles, x, w_int, n_out):
+    """Stream-backend twin of :func:`_packed_forward`: the weight side is
+    ONE (K/4, N) plane-interleaved array (layout version 1 — see
+    ``repro.core.ternary.interleave_planes``), DMA'd tile-by-tile by the
+    streaming decode kernel. Canonical version-1 planes enter with zero
+    per-step padding/relayout, exactly like the legacy path."""
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape((-1, k))
+    mult = math.lcm(spec.block, 8)
+    k_target = max(w_int.shape[-2] * 4, -(-k // mult) * mult)
+    out = _packed_stream_mac(
+        _pad_axis(x2, k_target, 1),
+        _pad_axis(w_int, k_target // 4, 0),
+        spec,
+        tiles,
+        spec.clamps,
+    )
+    return out[:, :n_out].reshape(lead + (n_out,)).astype(x.dtype)
+
+
 def execute_packed(
     spec: CiMExecSpec,
     x_t: jax.Array,
@@ -720,6 +775,7 @@ def execute_packed(
         raise ValueError(
             f"packed kernels implement exact|blocked, not {spec.formulation!r}"
         )
+    stream = spec.backend == "pallas_stream"
     if isinstance(w_pos, PackedPlanes):
         planes = w_pos
         if w_neg is not None:
@@ -734,7 +790,14 @@ def execute_packed(
                 f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
                 f"logical plane K={planes.k}"
             )
-        w_pos, w_neg, n_out = planes.pos, planes.neg, planes.n
+        n_out = planes.n
+        if stream:
+            # free on canonical version-1 planes; an (eager) interleave
+            # on legacy-layout planes — old stored planes still load
+            w_int = planes.interleaved()
+        else:
+            # free on legacy planes; de-interleaves version-1 storage
+            w_pos, w_neg = planes.planes()
     else:
         if w_neg is None:
             raise ValueError("raw planes need both w_pos and w_neg")
@@ -744,15 +807,26 @@ def execute_packed(
                 f"planes {w_pos.shape} / {w_neg.shape}"
             )
         n_out = w_pos.shape[-1]
+        if stream:
+            w_int = tern.interleave_planes(w_pos, w_neg)
     clean = dataclasses.replace(spec, error_prob=0.0)
     m = math.prod(x_t.shape[:-1])
-    k_dim = w_pos.shape[0] * 8
-    tiles = tiles_for(clean, m, k_dim, w_pos.shape[-1])
-    out = _profiled_call(
-        "execution.execute_packed", clean, x_t, m, k_dim, n_out,
-        int(w_pos.size) + int(w_neg.size),
-        lambda: _packed_forward(clean, tiles, x_t, w_pos, w_neg, n_out),
-    )
+    if stream:
+        k_dim, n_cols = w_int.shape[-2] * 4, w_int.shape[-1]
+        tiles = tiles_for(clean, m, k_dim, n_cols)
+        out = _profiled_call(
+            "execution.execute_packed", clean, x_t, m, k_dim, n_out,
+            int(w_int.size),
+            lambda: _packed_stream_forward(clean, tiles, x_t, w_int, n_out),
+        )
+    else:
+        k_dim = w_pos.shape[0] * 8
+        tiles = tiles_for(clean, m, k_dim, w_pos.shape[-1])
+        out = _profiled_call(
+            "execution.execute_packed", clean, x_t, m, k_dim, n_out,
+            int(w_pos.size) + int(w_neg.size),
+            lambda: _packed_forward(clean, tiles, x_t, w_pos, w_neg, n_out),
+        )
     return _apply_sense_channel(spec, out, x_t.shape[-1], key)
 
 
@@ -808,7 +882,8 @@ def execute_tp(
         raise ValueError(
             "execute_tp splits the contraction dim; packed (K-major 2-bit) "
             "planes shard over N instead — use execute_packed with "
-            "N-sharded planes (dist.sharding.packed_specs)"
+            "N-sharded planes (dist.sharding.packed_specs) or the "
+            "explicit column-parallel execute_packed_tp"
         )
     if spec.error_prob > 0.0:
         raise ValueError(
@@ -849,6 +924,100 @@ def execute_tp(
         out_specs=_P(),
     )
     return f(x2, wp, keys).reshape(lead + (n,)).astype(x_t.dtype)
+
+
+def execute_packed_tp(
+    spec: CiMExecSpec,
+    x_t: jax.Array,
+    planes,
+    mesh,
+    *,
+    axis_name: str = "model",
+) -> jax.Array:
+    """Column-parallel packed MAC over N-sharded stored planes (explicit
+    shard_map) — the TP twin of :func:`execute_packed`.
+
+    The packed (K-major 2-bit) planes shard over their *output* dim N
+    (``dist.sharding.packed_specs`` layout): each device runs the packed
+    kernel on its local (rows, N/tp) plane shard and the shards
+    concatenate. Column sharding never splits the contraction, so no
+    collective runs and TP is trivially **bit-identical** to the
+    single-device :func:`execute_packed` (pinned in
+    tests/test_stream_decode.py).
+
+    Decode-class shapes under a ``pallas_stream`` spec route through the
+    double-buffered streaming kernel per shard — each device overlaps
+    its own plane DMA with its MAC, which is exactly the regime the
+    N-sharded serving weights are in. ``planes`` must be a 2-D
+    :class:`repro.core.ternary.PackedPlanes`; its *padded* N must divide
+    the mesh axis.
+    """
+    from repro.dist.collectives import shard_map
+    from jax.sharding import PartitionSpec as _P
+
+    spec = spec.resolve()
+    if spec.packing != "bitplane_u8":
+        raise ValueError("execute_packed_tp requires packing='bitplane_u8'")
+    if spec.error_prob > 0.0:
+        raise ValueError(
+            "execute_packed_tp is the serving TP path; drive the sensing-"
+            "error channel through execute_packed (error_prob=0 here)"
+        )
+    if not isinstance(planes, tern.PackedPlanes):
+        raise ValueError("execute_packed_tp consumes stored PackedPlanes")
+    if planes.pos.ndim != 2:
+        raise ValueError(
+            f"stacked planes {planes.pos.shape}: slice one layer first "
+            f"(PackedPlanes.layer(i))"
+        )
+    if x_t.shape[-1] != planes.k:
+        raise ValueError(
+            f"plane/input shape mismatch: x K={x_t.shape[-1]}, "
+            f"logical plane K={planes.k}"
+        )
+    tp = int(mesh.shape[axis_name])
+    n_pad = int(planes.pos.shape[-1])
+    if n_pad % tp != 0:
+        raise ValueError(
+            f"padded plane N={n_pad} does not divide the {axis_name!r} "
+            f"axis ({tp} devices) — re-prepare with the mesh "
+            f"(quant.prepare.prepare_for_spec(mesh=...))"
+        )
+    stream = spec.backend == "pallas_stream"
+    lead, k = x_t.shape[:-1], x_t.shape[-1]
+    x2 = x_t.reshape((-1, k))
+    m = x2.shape[0]
+    if stream:
+        w_int = planes.interleaved()
+        k_dim = w_int.shape[-2] * 4
+        tiles = tiles_for(spec, m, k_dim, n_pad // tp)
+
+        def local(xs, wl):
+            return _packed_stream_forward(spec, tiles, xs, wl, wl.shape[-1])
+
+        f = shard_map(
+            local, mesh=mesh,
+            in_specs=(_P(), _P(None, axis_name)),
+            out_specs=_P(None, axis_name),
+            check_rep=False,  # pallas_call has no replication rule
+        )
+        out = f(x2, w_int)
+    else:
+        w_pos, w_neg = planes.planes()
+        k_dim = w_pos.shape[-2] * 8
+        tiles = tiles_for(spec, m, k_dim, n_pad // tp)
+
+        def local(xs, wp, wn):
+            return _packed_forward(spec, tiles, xs, wp, wn, wp.shape[-1])
+
+        f = shard_map(
+            local, mesh=mesh,
+            in_specs=(_P(), _P(None, axis_name), _P(None, axis_name)),
+            out_specs=_P(None, axis_name),
+            check_rep=False,  # pallas_call has no replication rule
+        )
+        out = f(x2, w_pos, w_neg)
+    return out[:, :planes.n].reshape(lead + (planes.n,)).astype(x_t.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -945,6 +1114,12 @@ def _packed_tiles(m, k, n):
     return (8, 256, 128) if m <= DECODE_M_MAX else (128, 256, 128)
 
 
+def _packed_stream_tiles(m, k, n):
+    # 4th element = DMA buffer depth (nbuf); prefill rows delegate to
+    # the non-stream prefill kernel, which ignores it
+    return (8, 256, 128, 2) if m <= DECODE_M_MAX else (128, 256, 128, 2)
+
+
 def _blocked_pallas(x2, w, spec, tiles):
     m, n = x2.shape[0], w.shape[1]
     bm, bk, bn = tiles
@@ -1013,6 +1188,32 @@ def _packed_planes_mac(x2, w_pos, w_neg, spec, tiles, cim: bool, pallas: bool):
     return out[:m, :n]
 
 
+def _packed_stream_mac(x2, w_int, spec, tiles, cim: bool):
+    """Streaming MAC from ONE plane-interleaved (K/4, N) uint8 array
+    (layout version 1). Decode-class M takes the double-buffered
+    streaming kernel — the (k, j) tile DMA rides ``nbuf`` VMEM slots
+    ahead of the int32 MAC; prefill-class M de-interleaves (a reshape,
+    never a pad) and delegates to the prefill kernel, which already
+    pipelines its grid."""
+    m, n = x2.shape[0], w_int.shape[1]
+    tl = tiles or _packed_stream_tiles(m, x2.shape[1], n)
+    bm, bk, bn = tl[0], tl[1], tl[2]
+    nbuf = tl[3] if len(tl) > 3 else 2
+    if bm <= DECODE_M_MAX:
+        xp = _pad_axis(x2, bk, 1)
+        wi = _pad_axis(_pad_axis(w_int, bk // 4, 0), bn, 1)
+        out = packed_cim_matmul_decode_stream(
+            _pad_axis(xp, bm, 0).astype(jnp.int8), wi,
+            block=spec.block, adc_max=spec.adc_max, cim=cim,
+            bk=bk, bn=bn, nbuf=nbuf, interpret=not _on_tpu(),
+        ).astype(jnp.float32)
+        return out[:m, :n]
+    w_pos, w_neg = tern.deinterleave_planes(w_int)
+    return _packed_planes_mac(
+        x2, w_pos, w_neg, spec, (bm, bk, bn), cim, pallas=True
+    )
+
+
 def _packed(x2, w, spec, tiles=None, *, cim: bool, pallas: bool):
     """Functional packed path (dense ternary w in hand): pack **once**
     at the logical K extent, then pad the 2-bit planes — not the dense
@@ -1022,9 +1223,23 @@ def _packed(x2, w, spec, tiles=None, *, cim: bool, pallas: bool):
     return _packed_planes_mac(x2, w_pos, w_neg, spec, tiles, cim, pallas)
 
 
+def _packed_stream(x2, w, spec, tiles=None, *, cim: bool):
+    """Functional stream path: pack once, interleave the planes (layout
+    version 1), stream."""
+    w_pos, w_neg = tern.pack_ternary(w.astype(jnp.int8), axis=0)
+    return _packed_stream_mac(
+        x2, tern.interleave_planes(w_pos, w_neg), spec, tiles, cim
+    )
+
+
 def _packed_stored(x2, w_pos, w_neg, spec, tiles=None):
     """Packed MAC from stored planes (no per-call pack) — the
     execute_packed fast path."""
+    if spec.backend == "pallas_stream":
+        return _packed_stream_mac(
+            x2, tern.interleave_planes(w_pos, w_neg), spec, tiles,
+            spec.clamps,
+        )
     return _packed_planes_mac(
         x2, w_pos, w_neg, spec, tiles, spec.clamps,
         pallas=spec.backend == "pallas",
@@ -1054,6 +1269,16 @@ register_backend(
     "blocked/pallas/bitplane_u8",
     functools.partial(_packed, cim=True, pallas=True), clamps=True,
     tiles=_packed_tiles,
+)
+register_backend(
+    "exact/pallas_stream/bitplane_u8",
+    functools.partial(_packed_stream, cim=False), clamps=False,
+    tiles=_packed_stream_tiles, tile_candidates=_STREAM_TILE_CANDIDATES,
+)
+register_backend(
+    "blocked/pallas_stream/bitplane_u8",
+    functools.partial(_packed_stream, cim=True), clamps=True,
+    tiles=_packed_stream_tiles, tile_candidates=_STREAM_TILE_CANDIDATES,
 )
 register_backend("corrected/jnp/none", _corrected_jnp, clamps=True)
 register_backend("bitplane/jnp/none", _bitplane_jnp, clamps=True)
@@ -1161,6 +1386,14 @@ def _audit_planes(spec: CiMExecSpec, k: int = 512, n: int = 256):
     k_mult, n_mult = canonical_plane_layout(spec)
     p1 = _pad_axis(_pad_axis(p1, k_mult // 8, 0), n_mult, 1)
     p2 = _pad_axis(_pad_axis(p2, k_mult // 8, 0), n_mult, 1)
+    if spec.resolve().backend == "pallas_stream":
+        # the canonical layout prepare_for_spec emits for stream specs:
+        # plane-interleaved version 1 (DESIGN.md §14)
+        wi = tern.interleave_planes(p1, p2)
+        return tern.PackedPlanes(
+            pos=wi, neg=wi[:0], scale=jnp.ones((n,), jnp.float32), k=k, n=n,
+            layout_version=tern.PLANE_LAYOUT_STREAM,
+        )
     return tern.PackedPlanes(
         pos=p1, neg=p2, scale=jnp.ones((n,), jnp.float32), k=k, n=n
     )
@@ -1172,8 +1405,11 @@ def no_decode_m128_rule() -> PrimRule:
     M only to the 8-row decode tile (DESIGN.md §9)."""
 
     def _m128(eqn) -> bool:
+        # uint8 operands are the stored 2-bit planes — their leading dim
+        # is K/8 (or K/4 interleaved), not M, and may legitimately be 128
         return any(
             getattr(v.aval, "ndim", 0) == 2 and v.aval.shape[0] == 128
+            and str(getattr(v.aval, "dtype", "")) != "uint8"
             for v in eqn.invars
         )
 
@@ -1197,7 +1433,8 @@ def _packed_decode_point(backend: str):
 
         def f(xv, pos, neg):
             lay = tern.PackedPlanes(pos=pos, neg=neg, scale=planes.scale,
-                                    k=planes.k, n=planes.n)
+                                    k=planes.k, n=planes.n,
+                                    layout_version=planes.layout_version)
             return execute_packed(spec, xv, lay)
 
         return f, (x, planes.pos, planes.neg)
@@ -1228,6 +1465,33 @@ register_trace_contract(
                 from_kinds=("int",), to=("float32", "float64", "bfloat16"),
                 within="pallas_call",
                 reason="decode-class event counts stay integer end-to-end",
+            ),
+        ),
+    ),
+)
+
+# The streaming decode path inherits every pallas decode rule (int32
+# accumulation, no uint8 pad — canonical version-1 planes enter the
+# kernel untouched — no int→float convert, M never padded to 128) and
+# adds the DMA-eqn pin: exactly nbuf (= 2 at the default tiles) async
+# copy *starts* — the unrolled warm-up plus the in-loop prefetch — and
+# ONE wait per trace. The pin is what makes the overlap auditable: a
+# kernel that silently stops prefetching, or blocks on every tile,
+# changes these counts before any benchmark notices (DESIGN.md §14).
+register_trace_contract(
+    "execution.execute_packed.decode.stream",
+    _packed_decode_point("pallas_stream"),
+    TraceContract(
+        **_PACKED_DECODE_RULES,
+        accum_dtype="int32",
+        pin_prims=(("dma_start", 2), ("dma_wait", 1)),
+        forbid_prims=(
+            no_decode_m128_rule(),
+            forbid_convert(
+                from_kinds=("int",), to=("float32", "float64", "bfloat16"),
+                within="pallas_call",
+                reason="the streaming decode path keeps the int8/int32 "
+                       "event-count datapath",
             ),
         ),
     ),

@@ -160,10 +160,41 @@ def pack_ternary(t: jax.Array, axis: int = 0) -> Tuple[jax.Array, jax.Array]:
     return _pack(m1), _pack(m2)
 
 
+# Canonical plane storage layouts (PackedPlanes.layout_version):
+#   0 — legacy: pos/neg are two separate (..., K/8, N) byte planes.
+#   1 — stream-friendly K-major plane-interleaved: ``pos`` holds one
+#       (..., K/4, N) array whose byte-rows alternate pos/neg (row 2r is
+#       the M1 byte-row r, row 2r+1 the M2 byte-row r) so one contiguous
+#       DMA fetches both planes of a (k, j) tile; ``neg`` is an empty
+#       (..., 0, N) placeholder keeping the pytree structure fixed.
+PLANE_LAYOUT_LEGACY = 0
+PLANE_LAYOUT_STREAM = 1
+
+
+def interleave_planes(pos: jax.Array, neg: jax.Array) -> jax.Array:
+    """(..., K/8, N) pos/neg byte planes -> one (..., K/4, N) array with
+    alternating pos/neg byte-rows (layout version 1). Pure reshape —
+    never a pad, so it is safe inside the no-uint8-pad traced contract."""
+    if pos.shape != neg.shape:
+        raise ValueError(f"plane shape mismatch: {pos.shape} vs {neg.shape}")
+    stacked = jnp.stack([pos, neg], axis=-2)  # (..., K/8, 2, N)
+    return stacked.reshape(pos.shape[:-2] + (2 * pos.shape[-2], pos.shape[-1]))
+
+
+def deinterleave_planes(w_int: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`interleave_planes`: (..., K/4, N) -> two
+    (..., K/8, N) byte planes."""
+    rows = w_int.shape[-2]
+    if rows % 2 != 0:
+        raise ValueError(f"interleaved plane rows {rows} not even")
+    split = w_int.reshape(w_int.shape[:-2] + (rows // 2, 2, w_int.shape[-1]))
+    return split[..., 0, :], split[..., 1, :]
+
+
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=("pos", "neg", "scale"),
-    meta_fields=("k", "n"),
+    meta_fields=("k", "n", "layout_version"),
 )
 @dataclasses.dataclass(frozen=True)
 class PackedPlanes:
@@ -178,10 +209,17 @@ class PackedPlanes:
     results slice back exactly (pad plane cells are (0, 0) cells — inert
     under the a/b event-count semantics).
 
-    Registered as a jax pytree (``k``/``n`` are static metadata), so a
-    tree of PackedPlanes flows through ``jax.device_put`` /
-    ``dist.sharding.packed_specs`` unchanged. Iterating yields
-    ``(pos, neg, scale)`` — the legacy ``pack_params`` tuple shape.
+    ``layout_version`` selects the physical storage ordering (see
+    ``PLANE_LAYOUT_*`` above). It defaults to the legacy two-plane
+    layout, so planes stored before the field existed round-trip
+    unchanged; :meth:`planes` and :meth:`interleaved` convert between
+    views regardless of the stored version.
+
+    Registered as a jax pytree (``k``/``n``/``layout_version`` are
+    static metadata), so a tree of PackedPlanes flows through
+    ``jax.device_put`` / ``dist.sharding.packed_specs`` unchanged.
+    Iterating yields ``(pos, neg, scale)`` — the legacy ``pack_params``
+    tuple shape, de-interleaved on demand for version-1 planes.
 
     Stacked-layer weights keep their leading layer dim on the planes;
     :meth:`layer` slices out one layer's planes for
@@ -193,9 +231,25 @@ class PackedPlanes:
     scale: jax.Array
     k: int
     n: int
+    layout_version: int = PLANE_LAYOUT_LEGACY
 
     def __iter__(self):
-        return iter((self.pos, self.neg, self.scale))
+        return iter(self.planes() + (self.scale,))
+
+    def planes(self) -> Tuple[jax.Array, jax.Array]:
+        """The two separate (..., K/8, N) byte planes (legacy view) —
+        a de-interleaving reshape when stored in layout version 1."""
+        if self.layout_version == PLANE_LAYOUT_STREAM:
+            return deinterleave_planes(self.pos)
+        return self.pos, self.neg
+
+    def interleaved(self) -> jax.Array:
+        """The (..., K/4, N) plane-interleaved array the streaming decode
+        kernel DMAs from — free for version-1 planes, an interleaving
+        reshape for legacy ones."""
+        if self.layout_version == PLANE_LAYOUT_STREAM:
+            return self.pos
+        return interleave_planes(self.pos, self.neg)
 
     def layer(self, i: int) -> "PackedPlanes":
         """One layer's (K/8, N) planes from a stacked (L, K/8, N) entry."""
@@ -205,7 +259,7 @@ class PackedPlanes:
             )
         return PackedPlanes(
             pos=self.pos[i], neg=self.neg[i], scale=self.scale[i],
-            k=self.k, n=self.n,
+            k=self.k, n=self.n, layout_version=self.layout_version,
         )
 
 

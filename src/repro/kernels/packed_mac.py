@@ -224,6 +224,147 @@ def packed_cim_matmul_decode(
     )(x, w_pos, w_neg)
 
 
+def _packed_decode_stream_kernel(
+    x_ref, w_ref, o_ref, *, sub, adc_max, cim, bk, nbuf, nk
+):
+    """Streaming decode body: K is not a grid dimension — the (k, j)
+    plane tiles are hand-DMA'd from ``w_ref`` (ANY memory space, i.e.
+    HBM on TPU) into an ``nbuf``-deep VMEM scratch while the previous
+    tile's MAC runs. ``pl.run_scoped`` owns the scratch + DMA
+    semaphores; the ``lax.fori_loop`` slot rotation is the same trace in
+    interpret mode, so the fallback is bit-identical by construction.
+    """
+    j = pl.program_id(0)
+    o_ref[...] = jnp.zeros_like(o_ref)
+    x = x_ref[...]  # (m, K) int8 ternary values, whole K extent in VMEM
+    m = x.shape[0]
+    bn = o_ref.shape[-1]
+    tk = bk // 4  # interleaved byte-rows per (k, j) tile: pos+neg
+
+    def body(scratch, sem):
+        def tile_dma(slot, kidx):
+            return pltpu.make_async_copy(
+                w_ref.at[pl.ds(kidx * tk, tk), pl.ds(j * bn, bn)],
+                scratch.at[slot],
+                sem.at[slot],
+            )
+
+        # Warm-up: the first nbuf-1 tiles go in flight before any MAC
+        # (statically unrolled — these are the extra dma_start eqns the
+        # tracing contract pins).
+        for kidx in range(min(nbuf - 1, nk)):
+            tile_dma(kidx, kidx).start()
+
+        def step(i, carry):
+            slot = jax.lax.rem(i, nbuf)
+
+            @pl.when(i + nbuf - 1 < nk)
+            def _prefetch():
+                tile_dma(jax.lax.rem(i + nbuf - 1, nbuf), i + nbuf - 1).start()
+
+            tile_dma(slot, i).wait()
+            tile = scratch[slot]  # (bk//4, bn) uint8, pos/neg interleaved
+            pair = tile.reshape(bk // 8, 2, bn)
+            w = _unpack_plane_bits(pair[:, 0, :], jnp.int8) - _unpack_plane_bits(
+                pair[:, 1, :], jnp.int8
+            )  # (bk, bn) int8
+            xc = jax.lax.dynamic_slice_in_dim(x, i * bk, bk, axis=1)
+            if not cim:
+                o_ref[...] += jax.lax.dot_general(
+                    xc, w, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                return carry
+            kb = bk // sub
+            xb = xc.reshape(m, kb, sub).swapaxes(0, 1)
+            wb = w.reshape(kb, sub, bn)
+            dims = (((2,), (1,)), ((0,), (0,)))
+            p = jax.lax.dot_general(
+                xb, wb, dims, preferred_element_type=jnp.int32
+            )
+            mm = jax.lax.dot_general(
+                jnp.abs(xb), jnp.abs(wb), dims, preferred_element_type=jnp.int32
+            )
+            a = (mm + p) // 2
+            b = (mm - p) // 2
+            part = jnp.minimum(a, adc_max) - jnp.minimum(b, adc_max)
+            o_ref[...] += jnp.sum(part, axis=0)
+            return carry
+
+        jax.lax.fori_loop(0, nk, step, 0)
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((nbuf, tk, bn), jnp.uint8),
+        sem=pltpu.SemaphoreType.DMA((nbuf,)),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "adc_max", "cim", "bk", "bn", "nbuf", "interpret"),
+)
+def packed_cim_matmul_decode_stream(
+    x: jax.Array,
+    w_int: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    adc_max: int = DEFAULT_ADC_MAX,
+    cim: bool = True,
+    bk: int = 256,
+    bn: int = 128,
+    nbuf: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """Double-buffered streaming variant of :func:`packed_cim_matmul_decode`.
+
+    x: (M, K) int8 ternary values, small M (callers pad to the decode
+    tile). ``w_int``: ONE (K/4, N) uint8 array holding both bitplanes in
+    the layout-version-1 plane-interleaved ordering
+    (``repro.core.ternary.interleave_planes``): byte-row 2r is the pos
+    byte-row r, 2r+1 the neg byte-row r, so a single contiguous DMA
+    fetches both planes of a (k, j) tile.
+
+    The grid is (N/bn,) — K is streamed inside the kernel: while tile
+    ``i``'s int32 a/b event-count MAC runs, tiles ``i+1 .. i+nbuf-1``
+    are already in flight into the rotating VMEM scratch
+    (``nbuf`` ∈ {2, 3} buffer slots, ``pltpu.make_async_copy`` against
+    per-slot DMA semaphores). The MAC math is byte-for-byte the decode
+    kernel's (int8 operands, int32 accumulation, integer halving and
+    ADC clamp), so the result is bit-identical to
+    :func:`packed_cim_matmul_decode` and the bitplane oracle — pinned in
+    tests/test_stream_decode.py and by the
+    ``execution.execute_packed.decode.stream`` tracing contract.
+    Returns int32 (M, N).
+    """
+    m_dim, k_dim = x.shape
+    rows, n_dim = w_int.shape
+    assert rows * 4 == k_dim, (x.shape, w_int.shape)
+    assert m_dim <= 128, f"stream decode kernel is for small M, got {m_dim}"
+    assert k_dim % bk == 0 and n_dim % bn == 0
+    assert bk % (8 * block) == 0 or not cim
+    assert nbuf in (2, 3), f"buffer depth {nbuf} not in {{2, 3}}"
+    nk = k_dim // bk
+    kernel = functools.partial(
+        _packed_decode_stream_kernel,
+        sub=block, adc_max=int(adc_max), cim=cim, bk=bk, nbuf=nbuf, nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_dim // bn,),
+        in_specs=[
+            pl.BlockSpec((m_dim, k_dim), lambda j: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((m_dim, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(x, w_int)
+
+
 # ---------------------------------------------------------------------------
 # Tracing contracts (repro.analysis — DESIGN.md §10)
 #
@@ -287,4 +428,38 @@ register_trace_contract(
     "kernels.packed_prefill_kernel",
     _prefill_kernel_point,
     TraceContract(max_host_callbacks=0, accum_dtype="float32"),
+)
+
+
+def _stream_kernel_point():
+    x = jnp.ones((8, 512), jnp.int8)
+    w_int = jnp.zeros((128, 256), jnp.uint8)  # (K/4, N) plane-interleaved
+
+    def f(xv, wi):
+        return packed_cim_matmul_decode_stream(xv, wi, interpret=True)
+
+    return f, (x, w_int)
+
+
+# The DMA-eqn pin is the overlap guarantee: exactly nbuf (= 2) dma_start
+# eqns — the unrolled warm-up plus the single in-loop prefetch — and one
+# dma_wait per trace. A kernel that quietly stopped prefetching (0 or 1
+# starts) or began blocking per tile (more waits) breaks the pin before
+# any benchmark notices.
+register_trace_contract(
+    "kernels.packed_decode_stream_kernel",
+    _stream_kernel_point,
+    TraceContract(
+        max_host_callbacks=0,
+        accum_dtype="int32",
+        pin_prims=(("dma_start", 2), ("dma_wait", 1)),
+        forbid_prims=(
+            forbid_convert(
+                from_kinds=("int",), to=("float32", "float64", "bfloat16"),
+                within="pallas_call",
+                reason="the streaming decode kernel keeps the int8/int32 "
+                       "event-count datapath of the decode kernel",
+            ),
+        ),
+    ),
 )

@@ -98,6 +98,9 @@ class CellResult:
     error: Optional[str] = None
     roofline: Optional[dict] = None
     memory_analysis: Optional[str] = None
+    #: measured-cost score (launch.hillclimb.score_cell) when the cell
+    #: was driven with --calibration; None for analytic-only runs
+    calibrated: Optional[dict] = None
 
 
 def lower_cell(

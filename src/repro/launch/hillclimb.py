@@ -8,6 +8,17 @@ through the dry-run lowering and records the roofline JSON:
         --quant cim_fused --cfg '{"attn_chunk": 2048}' \
         --qc '{"pre_quantized": true}' --out results/perf
 
+With ``--calibration PATH`` (a saved
+:class:`repro.profile.calibrate.CalibrationTable`) the cell is
+additionally *scored* with the fitted per-(exec-spec, shape-class)
+kernel costs — the measured analog of the analytic roofline: the cell's
+weight-bearing GEMM workload (``hw.workload.workload_layers``) is costed
+through ``predict_gemm_us`` and the score lands in the cell JSON under
+``"calibrated"``. Scores whose consulted fits carry a residual above
+``RESIDUAL_GATE_PCT`` are marked untrusted (``"trusted": false``) —
+:func:`rank_candidates` sorts them last so a noisy fit never silently
+reorders a perf iteration.
+
 The methodology (hypothesis -> change -> re-lower -> record) and the full
 iteration log live in EXPERIMENTS.md §Perf.
 """
@@ -20,6 +31,86 @@ os.environ.setdefault(
 import argparse
 import dataclasses
 import json
+
+#: fits with a median relative error above this are scoring-ineligible:
+#: the score is still reported, but flagged untrusted and ranked last
+RESIDUAL_GATE_PCT = 25.0
+
+
+def score_cell(arch, shape, table, spec=None,
+               residual_gate_pct: float = RESIDUAL_GATE_PCT) -> dict:
+    """Score one (arch, shape) cell with a fitted calibration table.
+
+    Costs every weight-bearing GEMM of one forward
+    (``hw.workload.workload_layers`` — the same workload the analytic
+    system projection uses) through ``table.predict_gemm_us`` under
+    ``spec`` (default: the table's ``default_spec``), dispatched per
+    layer by shape class exactly like the execution API. Returns::
+
+        {"spec", "predicted_us", "layers", "classes",
+         "worst_residual_pct", "trusted"}
+
+    ``trusted`` is False when any consulted fit's ``residual_pct``
+    exceeds ``residual_gate_pct`` (or a shape class had to borrow the
+    other class's fit) — the fit may rank candidates wrong, so
+    :func:`rank_candidates` pushes such scores below every trusted one.
+    """
+    from repro.hw.workload import _resolve, workload_layers
+    from repro.profile.calibrate import DECODE_M_MAX, kernel_key
+
+    cfg, shape_cell = _resolve(arch, shape)
+    layers = workload_layers(cfg, shape_cell)
+    spec = spec or table.default_spec
+    total = 0.0
+    classes = set()
+    worst = 0.0
+    trusted = True
+    for layer, count in layers:
+        cls = "decode" if layer.m <= DECODE_M_MAX else "prefill"
+        classes.add(cls)
+        fit = table.kernels.get(kernel_key(spec, cls))
+        if fit is None:
+            # predict_gemm_us borrows the other class's fit — usable,
+            # but extrapolated: never trust a ranking built on it
+            trusted = False
+            other = "prefill" if cls == "decode" else "decode"
+            fit = table.kernels.get(kernel_key(spec, other))
+        if fit is None:
+            known = ", ".join(sorted(table.kernels))
+            raise KeyError(f"no kernel fit for spec {spec!r} (known: {known})")
+        worst = max(worst, float(fit.residual_pct))
+        total += fit.predict_us(layer.m, layer.k, layer.n) * count
+    if worst > residual_gate_pct:
+        trusted = False
+    return {
+        "spec": spec,
+        "predicted_us": round(total, 3),
+        "layers": len(layers),
+        "classes": sorted(classes),
+        "worst_residual_pct": worst,
+        "trusted": trusted,
+    }
+
+
+def rank_candidates(candidates, table,
+                    residual_gate_pct: float = RESIDUAL_GATE_PCT) -> list:
+    """Rank perf-iteration candidates by fitted cost, fastest first.
+
+    ``candidates``: iterable of ``(name, arch, shape)`` or
+    ``(name, arch, shape, spec)`` tuples. Returns
+    ``[(name, score_dict), ...]`` sorted by ``predicted_us`` ascending
+    with every untrusted score (high-residual or borrowed-class fit)
+    after every trusted one, so calibration noise cannot promote a
+    candidate."""
+    scored = []
+    for cand in candidates:
+        name, arch, shape = cand[0], cand[1], cand[2]
+        spec = cand[3] if len(cand) > 3 else None
+        scored.append((name, score_cell(
+            arch, shape, table, spec=spec,
+            residual_gate_pct=residual_gate_pct)))
+    return sorted(scored,
+                  key=lambda ns: (not ns[1]["trusted"], ns[1]["predicted_us"]))
 
 
 def main(argv=None):
@@ -37,8 +128,22 @@ def main(argv=None):
                          "they were costed on")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="saved CalibrationTable JSON (profile.calibrate); "
+                         "scores the cell's GEMM workload with the fitted "
+                         "per-(spec, shape-class) costs next to the "
+                         "analytic roofline")
     ap.add_argument("--out", default="results/perf")
     args = ap.parse_args(argv)
+
+    table = None
+    if args.calibration is not None:
+        from repro.profile.calibrate import CalibrationTable
+
+        try:
+            table = CalibrationTable.load(args.calibration)
+        except (OSError, ValueError, KeyError) as e:
+            ap.error(f"bad --calibration {args.calibration!r}: {e}")
 
     # Validate registry-facing arguments up front with the valid sets in
     # the message — an unknown arch used to die as a bare KeyError deep
@@ -71,6 +176,11 @@ def main(argv=None):
         fsdp=args.fsdp,
         array_spec=args.array_spec,
     )
+    if table is not None and res.ok and not (res.error or "").startswith("SKIP"):
+        try:
+            res.calibrated = score_cell(args.arch, args.shape, table)
+        except KeyError as e:
+            res.calibrated = {"error": str(e)}
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.name}.json")
     with open(path, "w") as f:
@@ -82,6 +192,11 @@ def main(argv=None):
             f"Tc={r['t_compute_s']:.3e} Tm={r['t_memory_s']:.3e} "
             f"Tx={r['t_collective_s']:.3e} bottleneck={r['bottleneck']}"
         )
+        if res.calibrated and "predicted_us" in res.calibrated:
+            c = res.calibrated
+            print(f"calibrated[{c['spec']}]: {c['predicted_us']:.1f}us "
+                  f"(worst residual {c['worst_residual_pct']}%, "
+                  f"{'trusted' if c['trusted'] else 'UNTRUSTED'})")
         return 0
     print("ERROR:", res.error)
     return 1

@@ -34,14 +34,17 @@ from repro.profile.replay import (  # noqa: F401
     make_kernel_model,
     poisson_requests,
     predict_decode_step_us,
+    replay_traffic_bench,
     requests_from_trace,
     requests_like_bench,
     simulate,
+    table_from_traffic_row,
 )
 from repro.profile.trace import (  # noqa: F401
     TRACE_SCHEMA_VERSION,
     Profiler,
     TraceEvent,
+    backend_block,
     current_profiler,
     event_from_json,
     read_trace,

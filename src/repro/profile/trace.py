@@ -214,6 +214,23 @@ def current_profiler() -> Optional[Profiler]:
     return _ACTIVE
 
 
+def backend_block() -> Dict[str, Any]:
+    """Measurement provenance: the ``"backend"`` block every
+    BENCH_*.json embeds so validators know *where* numbers came from.
+    ``interpret`` is the load-bearing bit — off-TPU the Pallas kernels
+    run through the interpreter (the repo's ``interpret=not _on_tpu()``
+    convention), where timings prove bit-exactness and plumbing but
+    never compiled speed, so validators must refuse any compiled-
+    speedup claim made under it."""
+    dev = jax.devices()[0]
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "device_count": jax.device_count(),
+        "interpret": jax.default_backend() != "tpu",
+    }
+
+
 # ---------------------------------------------------------------------------
 # Step instrumentation (the serving engine's hook)
 # ---------------------------------------------------------------------------

@@ -104,15 +104,31 @@ def _canonicalize_packed(
     on the :class:`repro.core.ternary.PackedPlanes` so
     ``api.execute_packed`` slices results back exactly. This moves the
     pad/relayout the serving step used to re-trace *every decode step*
-    to prepare time, once."""
+    to prepare time, once.
+
+    Specs resolving to the ``pallas_stream`` backend store the canonical
+    planes **plane-interleaved** (layout version 1 — DESIGN.md §14): one
+    (…, K/4, N) array whose byte-rows alternate pos/neg, the ordering
+    the streaming decode kernel DMAs a whole (k, j) tile from in one
+    contiguous copy. The version rides on the ``PackedPlanes`` metadata,
+    so stored legacy planes round-trip unchanged and either layout feeds
+    either backend (``PackedPlanes.planes()``/``.interleaved()``)."""
     k_mult, n_mult = canonical_plane_layout(spec)
+    stream = spec.resolve().backend == "pallas_stream"
     rows = k_mult // 8
     out: Dict[str, tern.PackedPlanes] = {}
     for path, (p1, p2, scale) in packed.items():
         k, n = p1.shape[-2] * 8, p1.shape[-1]
         p1 = _pad_axis(_pad_axis(p1, rows, p1.ndim - 2), n_mult, p1.ndim - 1)
         p2 = _pad_axis(_pad_axis(p2, rows, p2.ndim - 2), n_mult, p2.ndim - 1)
-        out[path] = tern.PackedPlanes(pos=p1, neg=p2, scale=scale, k=k, n=n)
+        if stream:
+            wi = tern.interleave_planes(p1, p2)
+            out[path] = tern.PackedPlanes(
+                pos=wi, neg=wi[..., :0, :], scale=scale, k=k, n=n,
+                layout_version=tern.PLANE_LAYOUT_STREAM,
+            )
+        else:
+            out[path] = tern.PackedPlanes(pos=p1, neg=p2, scale=scale, k=k, n=n)
     return out
 
 

@@ -332,7 +332,20 @@ class ContinuousBatcher:
             params_placed = mesh is not None
             if exec_spec.packing == "bitplane_u8":
                 params, self.packed = prepared
-                exec_spec = dataclasses.replace(exec_spec, packing="none")
+                # the in-model dense path serves the folded ternary
+                # weights, so drop the packing; packed-only backends
+                # (pallas_stream has no dense kernel — it exists to
+                # stream stored planes) fall back to "auto" for the
+                # dense path while self.packed keeps the stream layout
+                # for api.execute_packed / execute_packed_tp consumers
+                from repro.core.execution import get_backend
+
+                dense_spec = dataclasses.replace(exec_spec, packing="none")
+                try:
+                    get_backend(dense_spec)
+                except KeyError:
+                    dense_spec = dataclasses.replace(dense_spec, backend="auto")
+                exec_spec = dense_spec
             else:
                 params = prepared
             cfg = cfg.replace(

@@ -412,3 +412,88 @@ class TestHillclimbValidation:
         err = self._err(capsys, ["--arch", "yi-34b", "--shape", "train_4k",
                                  "--name", "X", "--array-spec", "unobtanium"])
         assert "unobtanium" in err and "8T-SRAM" in err
+
+    def test_bad_calibration_friendly(self, capsys, tmp_path):
+        bad = tmp_path / "cal.json"
+        bad.write_text('{"version": 999}')
+        err = self._err(capsys, ["--arch", "yi-34b", "--shape", "train_4k",
+                                 "--name", "X", "--calibration", str(bad)])
+        assert "calibration" in err
+
+
+class TestHillclimbCalibratedScoring:
+    """--calibration scoring: the fitted per-(spec, shape-class) costs
+    rank perf candidates, and a noisy fit (high residual_pct) can never
+    promote one (DESIGN.md §11 — measured costs beside the analytic
+    roofline)."""
+
+    S1 = "blocked/pallas/bitplane_u8"
+    S2 = "blocked/pallas_stream/bitplane_u8"
+
+    def _table(self, mmac_by_spec, resid=1.0):
+        from repro.profile.calibrate import (
+            CALIBRATION_VERSION, CalibrationTable, KernelFit)
+
+        kern = {}
+        for spec, (mmac, r) in mmac_by_spec.items():
+            fit = KernelFit(fixed_us=10.0, us_per_mmac=mmac, us_per_mb=0.5,
+                            bytes_per_weight=0.25, n_events=20,
+                            residual_pct=r)
+            kern[f"{spec}|decode"] = fit
+            kern[f"{spec}|prefill"] = fit
+        return CalibrationTable(version=CALIBRATION_VERSION, backend="cpu",
+                                default_spec=self.S1, kernels=kern)
+
+    def test_score_cell_costs_workload(self):
+        from repro.launch.hillclimb import score_cell
+
+        s = score_cell("smollm-135m", "decode_32k",
+                       self._table({self.S1: (0.5, 1.0)}))
+        assert s["trusted"] and s["predicted_us"] > 0 and s["layers"] > 0
+        # scale the fitted per-MAC cost -> the score must follow
+        s10 = score_cell("smollm-135m", "decode_32k",
+                         self._table({self.S1: (5.0, 1.0)}))
+        assert s10["predicted_us"] > s["predicted_us"]
+
+    def test_calibrated_table_changes_ranking(self):
+        """The pinned satellite contract: two candidate specs, two
+        tables with the fitted costs swapped — the ranking flips with
+        the table (residuals low, so both rankings are trusted)."""
+        from repro.launch.hillclimb import rank_candidates
+
+        cands = [("base", "smollm-135m", "decode_32k", self.S1),
+                 ("stream", "smollm-135m", "decode_32k", self.S2)]
+        r1 = rank_candidates(cands, self._table(
+            {self.S1: (0.01, 1.0), self.S2: (0.5, 1.0)}))
+        r2 = rank_candidates(cands, self._table(
+            {self.S1: (0.5, 1.0), self.S2: (0.01, 1.0)}))
+        assert [n for n, _ in r1] == ["base", "stream"]
+        assert [n for n, _ in r2] == ["stream", "base"]
+        assert all(s["trusted"] for _, s in r1 + r2)
+
+    def test_high_residual_never_promotes(self):
+        """A fit over the residual gate is untrusted and ranked last
+        even when its predicted time is the fastest."""
+        from repro.launch.hillclimb import rank_candidates
+
+        cands = [("base", "smollm-135m", "decode_32k", self.S1),
+                 ("fast-noisy", "smollm-135m", "decode_32k", self.S2)]
+        ranked = rank_candidates(cands, self._table(
+            {self.S1: (0.5, 1.0), self.S2: (1e-6, 60.0)}))
+        assert [n for n, _ in ranked] == ["base", "fast-noisy"]
+        assert not ranked[1][1]["trusted"]
+
+    def test_missing_class_fit_is_untrusted(self):
+        """predict borrowing the other shape class's fit still scores,
+        but the extrapolation is flagged."""
+        from repro.launch.hillclimb import score_cell
+        from repro.profile.calibrate import (
+            CALIBRATION_VERSION, CalibrationTable, KernelFit)
+
+        table = CalibrationTable(
+            version=CALIBRATION_VERSION, backend="cpu",
+            default_spec=self.S1,
+            kernels={f"{self.S1}|decode": KernelFit(
+                10.0, 0.5, 0.5, 0.25, 20, 1.0)})
+        s = score_cell("smollm-135m", "prefill_32k", table)
+        assert s["predicted_us"] > 0 and not s["trusted"]

@@ -428,7 +428,9 @@ class TestBenchValidator:
                                {"arch": "a1", "occupancy": 2})] * 3
         table = P.calibrate(events + engine, backend="cpu")
         return validate_result, {
-            "bench": "calibrate", "smoke": True, "backend": "cpu",
+            "bench": "calibrate", "smoke": True,
+            "backend": {"platform": "cpu", "device_kind": "cpu",
+                        "device_count": 1, "interpret": True},
             "error_bound_pct": 40.0,
             "kernel_sweep": {"specs": ["exact/jnp/none"], "repeats": 3,
                              "n_events": 3},
@@ -455,3 +457,94 @@ class TestBenchValidator:
             broken = {k: v for k, v in d.items() if k != field}
             with pytest.raises(ValueError, match="missing"):
                 validate(broken)
+
+    def test_rejects_legacy_string_backend(self):
+        """The backend field must be the provenance block, not the old
+        bare platform string — artifacts must say whether they were
+        produced under interpret mode."""
+        validate, d = self._result()
+        with pytest.raises(ValueError, match="provenance"):
+            validate(dict(d, backend="cpu"))
+
+
+# ---------------------------------------------------------------------------
+# Backend provenance + measured-traffic replay closure
+# ---------------------------------------------------------------------------
+
+
+class TestBackendBlock:
+    def test_block_shape(self):
+        b = P.backend_block()
+        assert set(b) == {"platform", "device_kind", "device_count",
+                          "interpret"}
+        assert b["platform"] == jax.default_backend()
+        assert b["interpret"] == (jax.default_backend() != "tpu")
+        assert b["device_count"] >= 1
+
+    def test_bench_mac_refuses_compiled_claim_under_interpret(self):
+        """bench_mac's validator must refuse a compiled-speedup claim in
+        an artifact whose backend block says interpret mode — interpret
+        timings measure the emulator, not the kernel."""
+        import sys
+        from pathlib import Path
+
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+        from benchmarks.bench_mac import validate_result
+
+        row = {"m": 8, "k": 512, "n": 256, "formulation": "exact",
+               "backend": "pallas", "packing": "bitplane_u8",
+               "shape_class": "decode", "us": 10.0, "weight_gbs": 1.0,
+               "bit_identical": True, "speedup_vs_prepad": 1.5}
+        d = {"bench": "mac", "smoke": True,
+             "backend": {"platform": "cpu", "device_kind": "cpu",
+                         "device_count": 1, "interpret": True},
+             "k": 512, "n": 256, "block": 16, "adc_max": 8,
+             "rows": [row], "decode_speedup_max": 1.5,
+             "decode_speedup_min": 1.5, "all_bit_identical": True}
+        validate_result(d)  # no claim: fine under interpret
+        with pytest.raises(ValueError, match="interpret"):
+            validate_result(dict(d, compiled_speedup=2.0))
+        stream = {"rows": 1, "ratio_min": 0.5, "ratio_max": 0.9,
+                  "bit_identical": True}
+        validate_result(dict(d, stream=stream))
+        with pytest.raises(ValueError, match="interpret"):
+            validate_result(dict(d, stream=dict(stream,
+                                                compiled_speedup=2.0)))
+        with pytest.raises(ValueError, match="provenance"):
+            validate_result(dict(d, backend="cpu"))
+
+
+class TestTrafficReplayClosure:
+    def test_replays_committed_artifact_within_bound(self):
+        """The loop-closing check on the committed BENCH_traffic.json:
+        rebuilding the Poisson workload and replaying it through the
+        row's own measured segment times reproduces the measured goodput
+        and TTFT within the artifact's stated bound."""
+        import json
+        from pathlib import Path
+
+        path = Path(__file__).resolve().parents[1] / "BENCH_traffic.json"
+        bench = json.loads(path.read_text())
+        predicted, cmp = P.replay_traffic_bench(bench, "1")
+        bound = float(bench["replay_check"]["error_bound_pct"])
+        assert cmp["goodput_error_pct"] <= bound, cmp
+        assert cmp["ttft_error_pct"] <= bound, cmp
+        # the discrete schedule must agree exactly, not approximately
+        assert cmp["predicted_tokens"] == cmp["measured_tokens"]
+        assert predicted["decode_steps"] == bench["rows"]["1"]["decode_steps"]
+
+    def test_rejects_multi_replica_row(self):
+        bench = {"rows": {"2": {"replicas": 2}}, "arch": "a", "seed": 0,
+                 "n_slots": 4, "s_max": 64}
+        with pytest.raises(ValueError, match="replicas"):
+            P.replay_traffic_bench(bench, "2")
+
+    def test_table_from_traffic_row(self):
+        row = {"tok_latency_us": {"p50": 1500.0}, "ttft_us": {"p50": 9000.0},
+               "queue_wait_us": {"p50": 2000.0}, "decode_steps": 30,
+               "prefill_batches": 8}
+        table = P.table_from_traffic_row(row, "smollm-135m")
+        fit = next(iter(table.engines.values()))
+        assert fit.decode_fixed_us == 1500.0
+        assert fit.prefill_us == 7000.0
+        assert fit.n_decode == 30 and fit.n_prefill == 8

@@ -1,0 +1,332 @@
+"""Streaming double-buffered decode kernel (DESIGN.md §14).
+
+The contract pinned here:
+
+  * **bit-equality, three ways**: for every ragged decode M and every
+    buffer depth, ``packed_cim_matmul_decode_stream`` returns the same
+    bits as ``packed_cim_matmul_decode`` and the jnp bitplane oracle —
+    overlapping the plane DMA with the MAC must never change a single
+    event count;
+  * **dispatch**: the registered ``pallas_stream`` specs resolve through
+    ``api.execute_packed`` / ``api.execute`` bit-equal to the ``pallas``
+    and ``jnp`` backends across ragged shapes;
+  * **layout versions**: the plane-interleaved version-1 storage
+    round-trips exactly (interleave ∘ deinterleave = id), v1 planes
+    serve under the legacy backend and v0 planes under the stream
+    backend (each converts on the fly), and ``prepare_for_spec`` emits
+    v1 for stream specs / v0 otherwise;
+  * **TP**: ``execute_packed_tp`` over N-sharded planes is bit-identical
+    to the single-device path for both the stream and legacy branches;
+  * **contracts**: the ``execution.execute_packed.decode.stream`` trace
+    point passes its own pins (positive half), and the DMA-eqn pin
+    actually fires on a trace with a different buffer depth (negative
+    half — the auditor is not vacuously green).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import ternary as tern
+from repro.core.execution import (
+    clear_tile_cache,
+    execute_packed_tp,
+    set_shape_class_override,
+)
+from repro.kernels.packed_mac import (
+    packed_cim_matmul_decode,
+    packed_cim_matmul_decode_stream,
+)
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.quant.prepare import prepare_for_spec
+
+RAGGED_M = (1, 2, 3, 5, 7)
+STREAM_SPECS = [s for s in api.registered_specs()
+                if s.backend == "pallas_stream"]
+
+
+def rand_ternary(key, shape, p_zero=0.25, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    sign = jax.random.choice(k1, jnp.array([-1, 1]), shape)
+    keep = jax.random.bernoulli(k2, 1 - p_zero, shape)
+    return (sign * keep).astype(dtype)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tile_state():
+    yield
+    set_shape_class_override(None)
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level bit-equality: stream vs decode vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestStreamKernelBitEquality:
+    @pytest.mark.parametrize("nbuf", [2, 3])
+    @pytest.mark.parametrize("cim", [True, False], ids=["blocked", "exact"])
+    def test_stream_equals_decode_and_oracle(self, cim, nbuf):
+        """Multi-tile (K, N) grid, decode-tile M: the streaming kernel's
+        rotated-scratch MAC returns the decode kernel's exact bits, and
+        both match the unpacked jnp oracle."""
+        m, k, n = 8, 1024, 256
+        kx, kw = jax.random.split(jax.random.PRNGKey(3))
+        x = rand_ternary(kx, (m, k), p_zero=0.1, dtype=jnp.int8)
+        t = rand_ternary(kw, (k, n), p_zero=0.1, dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        base = np.asarray(packed_cim_matmul_decode(
+            x, p1, p2, cim=cim, interpret=True))
+        stream = np.asarray(packed_cim_matmul_decode_stream(
+            x, tern.interleave_planes(p1, p2), cim=cim, nbuf=nbuf,
+            interpret=True))
+        np.testing.assert_array_equal(stream, base)
+        if not cim:
+            oracle = np.asarray(x.astype(jnp.int32) @ t.astype(jnp.int32))
+            np.testing.assert_array_equal(stream, oracle)
+
+    def test_single_k_tile(self):
+        """nk == 1: the warm-up prefetch covers the whole loop — no
+        in-flight tile ever outruns the buffer ring."""
+        m, k, n = 4, 256, 128
+        kx, kw = jax.random.split(jax.random.PRNGKey(9))
+        x = rand_ternary(kx, (m, k), dtype=jnp.int8)
+        t = rand_ternary(kw, (k, n), dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        np.testing.assert_array_equal(
+            np.asarray(packed_cim_matmul_decode_stream(
+                x, tern.interleave_planes(p1, p2), interpret=True)),
+            np.asarray(packed_cim_matmul_decode(x, p1, p2, interpret=True)))
+
+    def test_rejects_bad_nbuf(self):
+        x = jnp.zeros((4, 256), jnp.int8)
+        w = jnp.zeros((64, 128), jnp.uint8)
+        with pytest.raises(AssertionError, match="buffer depth"):
+            packed_cim_matmul_decode_stream(x, w, nbuf=4, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-level bit-equality across ragged shapes
+# ---------------------------------------------------------------------------
+
+
+class TestStreamDispatch:
+    @pytest.mark.parametrize("spec", STREAM_SPECS, ids=lambda s: s.name)
+    def test_registered_stream_specs_exist(self, spec):
+        assert spec.packing == "bitplane_u8"
+
+    @pytest.mark.parametrize("formulation", ["blocked", "exact"])
+    def test_execute_packed_ragged_m_three_backends(self, formulation):
+        """Ragged decode M sweep: pallas_stream == pallas == jnp through
+        the public execute_packed, on ragged (K, N) (exercises the
+        canonical-pad + slice-back path around the kernel)."""
+        k, n = 96, 24
+        kx, kw = jax.random.split(jax.random.PRNGKey(5))
+        t = rand_ternary(kw, (k, n), p_zero=0.1, dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        outs = {}
+        for backend in ("pallas_stream", "pallas", "jnp"):
+            spec = api.CiMExecSpec(formulation=formulation, backend=backend,
+                                   packing="bitplane_u8")
+            rows = []
+            for m in RAGGED_M:
+                x = rand_ternary(jax.random.fold_in(kx, m), (m, k),
+                                 p_zero=0.1)
+                rows.append(np.asarray(api.execute_packed(spec, x, p1, p2)))
+            outs[backend] = rows
+        for m, a, b, c in zip(RAGGED_M, outs["pallas_stream"],
+                              outs["pallas"], outs["jnp"]):
+            np.testing.assert_array_equal(a, b, err_msg=f"stream≠pallas M={m}")
+            np.testing.assert_array_equal(a, c, err_msg=f"stream≠jnp M={m}")
+
+    def test_execute_dense_path(self):
+        """api.execute (dense ternary weights, packing on the fly) under
+        the stream backend matches the jnp reference."""
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas_stream",
+                               packing="bitplane_u8")
+        ref = dataclasses.replace(spec, backend="jnp")
+        k, n = 45, 19
+        kx, kw = jax.random.split(jax.random.PRNGKey(11))
+        w = rand_ternary(kw, (k, n), p_zero=0.1)
+        for m in RAGGED_M:
+            x = rand_ternary(jax.random.fold_in(kx, m), (m, k), p_zero=0.1)
+            np.testing.assert_array_equal(
+                np.asarray(api.execute(spec, x, w)),
+                np.asarray(api.execute(ref, x, w)), err_msg=f"M={m}")
+
+
+# ---------------------------------------------------------------------------
+# Plane layout versions
+# ---------------------------------------------------------------------------
+
+
+class TestPlaneLayoutVersions:
+    def test_interleave_roundtrip(self):
+        kp, kn = jax.random.split(jax.random.PRNGKey(0))
+        pos = jax.random.randint(kp, (2, 32, 24), 0, 256, jnp.int32)
+        pos = pos.astype(jnp.uint8)
+        neg = jax.random.randint(kn, (2, 32, 24), 0, 256, jnp.int32)
+        neg = neg.astype(jnp.uint8)
+        wi = tern.interleave_planes(pos, neg)
+        assert wi.shape == (2, 64, 24)
+        p, q = tern.deinterleave_planes(wi)
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(pos))
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(neg))
+
+    def test_interleave_validation(self):
+        with pytest.raises(ValueError, match="mismatch"):
+            tern.interleave_planes(jnp.zeros((4, 8), jnp.uint8),
+                                   jnp.zeros((3, 8), jnp.uint8))
+        with pytest.raises(ValueError, match="not even"):
+            tern.deinterleave_planes(jnp.zeros((5, 8), jnp.uint8))
+
+    def test_packed_planes_views_cross_version(self):
+        """A v0 and a v1 PackedPlanes over the same logical weights give
+        identical answers from BOTH views (.planes() and
+        .interleaved()), and iteration yields the legacy tuple."""
+        kw = jax.random.PRNGKey(2)
+        t = rand_ternary(kw, (64, 16), dtype=jnp.int8)
+        p1, p2 = tern.pack_ternary(t, axis=0)
+        scale = jnp.ones((16,), jnp.float32)
+        v0 = tern.PackedPlanes(pos=p1, neg=p2, scale=scale, k=64, n=16)
+        wi = tern.interleave_planes(p1, p2)
+        v1 = tern.PackedPlanes(pos=wi, neg=wi[:0], scale=scale, k=64, n=16,
+                               layout_version=tern.PLANE_LAYOUT_STREAM)
+        assert v0.layout_version == tern.PLANE_LAYOUT_LEGACY
+        for a, b in zip(v0.planes(), v1.planes()):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(v0.interleaved()),
+                                      np.asarray(v1.interleaved()))
+        pos_it, neg_it, scale_it = v1
+        np.testing.assert_array_equal(np.asarray(pos_it), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(neg_it), np.asarray(p2))
+
+    def test_cross_version_execute_packed(self):
+        """v1 stored planes serve under the legacy pallas backend and v0
+        planes under the stream backend — same bits both ways (each
+        backend converts views on the fly)."""
+        stream = api.CiMExecSpec(formulation="blocked",
+                                 backend="pallas_stream",
+                                 packing="bitplane_u8")
+        legacy = dataclasses.replace(stream, backend="pallas")
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        _, v1 = prepare_for_spec(params, stream)
+        _, v0 = prepare_for_spec(params, legacy)
+        lay1 = v1["blocks/attn/wq"].layer(0)
+        lay0 = v0["blocks/attn/wq"].layer(0)
+        assert lay1.layout_version == tern.PLANE_LAYOUT_STREAM
+        assert lay0.layout_version == tern.PLANE_LAYOUT_LEGACY
+        x = rand_ternary(jax.random.PRNGKey(1), (3, lay1.k), p_zero=0.1)
+        outs = [np.asarray(api.execute_packed(s, x, lay))
+                for s in (stream, legacy) for lay in (lay1, lay0)]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_layer_propagates_layout_version(self):
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        spec = api.CiMExecSpec(formulation="blocked",
+                               backend="pallas_stream",
+                               packing="bitplane_u8")
+        _, packed = prepare_for_spec(params, spec)
+        entry = packed["blocks/attn/wq"]
+        assert entry.layout_version == tern.PLANE_LAYOUT_STREAM
+        lay = entry.layer(0)
+        assert lay.layout_version == tern.PLANE_LAYOUT_STREAM
+        # v1 stores one (L, K/4, N) array; neg is the 0-row placeholder
+        assert entry.pos.shape[-2] == 2 * (entry.neg.shape[-2] or
+                                           entry.pos.shape[-2] // 2)
+        assert lay.neg.shape[-2] == 0
+
+
+# ---------------------------------------------------------------------------
+# TP: column-parallel stream execution
+# ---------------------------------------------------------------------------
+
+
+class TestStreamTP:
+    @pytest.mark.parametrize("backend", ["pallas_stream", "pallas"])
+    def test_execute_packed_tp_bit_equal(self, backend, tp_mesh):
+        """N-sharded packed MAC == single-device packed MAC, bit for
+        bit, for both the stream and legacy branches."""
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(2)
+        spec = api.CiMExecSpec(formulation="blocked", backend=backend,
+                               packing="bitplane_u8")
+        cfg = get_config("smollm-135m", smoke=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        _, packed = prepare_for_spec(params, spec, mesh=mesh)
+        lay = packed["blocks/attn/wq"].layer(0)
+        for m in (1, 3, 7):
+            x = rand_ternary(jax.random.PRNGKey(m), (m, lay.k), p_zero=0.1)
+            tp_out = np.asarray(execute_packed_tp(spec, x, lay, mesh))
+            solo = np.asarray(api.execute_packed(spec, x, lay))
+            np.testing.assert_array_equal(tp_out, solo, err_msg=f"M={m}")
+
+    def test_execute_packed_tp_validation(self, tp_mesh):
+        from repro.launch.mesh import make_tp_mesh
+
+        mesh = make_tp_mesh(2)
+        spec = api.CiMExecSpec(formulation="blocked", backend="pallas_stream",
+                               packing="bitplane_u8")
+        x = jnp.zeros((2, 64), jnp.float32)
+        with pytest.raises(ValueError, match="PackedPlanes"):
+            execute_packed_tp(spec, x, (x, x, x), mesh)
+        dense = dataclasses.replace(spec, packing="none")
+        with pytest.raises(ValueError, match="bitplane_u8"):
+            execute_packed_tp(dense, x, None, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Tracing contract: positive and negative halves
+# ---------------------------------------------------------------------------
+
+
+class TestStreamContract:
+    def test_contract_passes(self):
+        """Positive half: the registered stream decode trace point meets
+        its own pins (int32 accum, no uint8 pad, dma_start==2,
+        dma_wait==1)."""
+        from repro.analysis import check_jaxpr
+        from repro.analysis.contracts import get_trace_contract
+
+        point = get_trace_contract("execution.execute_packed.decode.stream")
+        fn, args = point.build()
+        findings = check_jaxpr(jax.make_jaxpr(fn)(*args), point.contract,
+                               "test.stream.positive")
+        assert not findings, findings
+
+    def test_dma_pin_fires_on_depth_change(self):
+        """Negative half: a 3-deep buffer ring emits one more warm-up
+        dma_start — the pinned count must flag it (the pin watches the
+        rotation structure, not the grid)."""
+        from repro.analysis import check_jaxpr
+        from repro.analysis.contracts import get_trace_contract
+
+        point = get_trace_contract("execution.execute_packed.decode.stream")
+        x = jnp.ones((4, 512), jnp.int8)
+        wi = jnp.zeros((128, 256), jnp.uint8)
+
+        def f(xv, w):
+            return packed_cim_matmul_decode_stream(xv, w, nbuf=3,
+                                                   interpret=True)
+
+        findings = check_jaxpr(jax.make_jaxpr(f)(x, wi), point.contract,
+                               "test.stream.negative")
+        assert any("dma_start" in f.message and f.rule == "prim-count"
+                   for f in findings), findings
+
+    def test_kernel_contract_registered(self):
+        from repro.analysis.contracts import get_trace_contract
+
+        point = get_trace_contract("kernels.packed_decode_stream_kernel")
+        assert dict(point.contract.pin_prims) == {"dma_start": 2,
+                                                  "dma_wait": 1}
+        assert point.contract.accum_dtype == "int32"
